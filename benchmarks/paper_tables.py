@@ -1,0 +1,229 @@
+"""Benchmarks reproducing the paper's tables/figures. Each function
+returns rows of (name, us_per_call, derived-metric string)."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *args, n=3, **kw):
+    fn(*args, **kw)          # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Table 1: KV cache bytes/token
+# ---------------------------------------------------------------------------
+
+
+def table1_kv_cache():
+    from repro.configs.base import get_config, list_archs
+    from repro.core.mla import kv_bytes_per_token
+    from repro.launch.costs import cache_bytes
+
+    rows = []
+    # paper's own rows, exact
+    dsv3 = kv_bytes_per_token(get_config("deepseek-v3-671b"))
+    rows.append(("table1/deepseek-v3-mla", 0.0,
+                 f"{dsv3/1000:.3f}KB/token (paper 70.272)"))
+    qwen72 = 2 * 8 * 128 * 2 * 80
+    llama405 = 2 * 8 * 128 * 2 * 126
+    rows.append(("table1/qwen2.5-72b-gqa", 0.0,
+                 f"{qwen72/1000:.3f}KB/token (paper 327.680)"))
+    rows.append(("table1/llama3.1-405b-gqa", 0.0,
+                 f"{llama405/1000:.3f}KB/token (paper 516.096)"))
+    # every assigned arch: decode-state bytes per token of context
+    # (SSM/RG-LRU state is per-sequence — constant in context length)
+    for arch in list_archs():
+        cfg = get_config(arch)
+        b = cache_bytes(cfg, batch=1, context=1)
+        unit = ("KB/seq (constant)" if cfg.family in ("ssm", "hybrid")
+                else "KB/token")
+        rows.append((f"table1/{arch}", 0.0, f"{b/1000:.3f}{unit}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2: training GFLOPs/token
+# ---------------------------------------------------------------------------
+
+
+def table2_flops():
+    from repro.configs.base import SHAPES, get_config, list_archs
+    from repro.launch.costs import step_costs
+
+    rows = []
+    paper = {"deepseek-v3-671b": 250}
+    for arch in list_archs():
+        cfg = get_config(arch)
+        c = step_costs(cfg, SHAPES["train_4k"], remat="none")
+        g = c.flops_fwd * 3 / c.tokens / 1e9
+        note = f" (paper {paper[arch]})" if arch in paper else ""
+        rows.append((f"table2/{arch}", 0.0, f"{g:.0f}GFLOPs/token{note}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §2.3.2: EP speed limits (TPOT roofline)
+# ---------------------------------------------------------------------------
+
+
+def sec232_tpot():
+    from repro.network.perfmodel import (paper_gb200, paper_h800_ib,
+                                         tpu_v5e_ici)
+    rows = []
+    for m, paper in [(paper_h800_ib(), "paper 14.76ms/67tps"),
+                     (paper_gb200(), "paper 0.82ms/1200tps"),
+                     (tpu_v5e_ici(dedup=False), "ours, flat EP"),
+                     (tpu_v5e_ici(dedup=True), "ours, node-limited dedup")]:
+        rows.append((f"sec232/{m.name}", m.comm_time_s * 1e6,
+                     f"TPOT={m.tpot_s*1e3:.2f}ms tps={m.tokens_per_s:.0f} "
+                     f"({paper})"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: network topology cost
+# ---------------------------------------------------------------------------
+
+
+def table3_network():
+    from repro.network.topology import PAPER_TABLE3, table3
+    rows = []
+    for name, t in table3().items():
+        ref = PAPER_TABLE3[name]
+        rows.append((f"table3/{name}", 0.0,
+                     f"ep={t.endpoints} sw={t.switches} links={t.links} "
+                     f"cost=${t.cost/1e6:.0f}M/[{ref['cost_m']}M] "
+                     f"$per_ep={t.cost_per_endpoint/1e3:.2f}k"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figures 5-7: all-to-all effective bandwidth vs message size
+# ---------------------------------------------------------------------------
+
+
+def fig5_alltoall():
+    from repro.network.perfmodel import alltoall_busbw
+    rows = []
+    for mb in (0.25, 1, 4, 16, 64, 256):
+        bw = alltoall_busbw(mb * 2 ** 20, devices=128)
+        rows.append((f"fig5/a2a_{mb}MB", 0.0,
+                     f"busbw={bw/1e9:.1f}GB/s (paper Fig7: >40GB/s at "
+                     f"large msgs)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 4-style: DualPipe vs 1F1B schedule + MFU conventions
+# ---------------------------------------------------------------------------
+
+
+def table4_schedule():
+    from repro.network.perfmodel import mfu
+    from repro.parallel.pipeline import dualpipe_bubble, onef1b_bubble
+    rows = []
+    # paper Table 4: 1F=1.13s 1B=1.99s 1W=0.48s bubble=2.06s/step 19.926s
+    a = onef1b_bubble(16, 32, f=1.13, b=1.99, w=0.48)
+    b = dualpipe_bubble(16, 32, f=1.13, b=1.99, w=0.48)
+    rows.append(("table4/1F1B", 0.0, f"bubble_frac={a.bubble_frac:.3f}"))
+    rows.append(("table4/DualPipe", 0.0,
+                 f"bubble_frac={b.bubble_frac:.3f} (overlapped comm)"))
+    m = mfu(tokens_per_step=2048 * 4096 / 15.0, step_time_s=1.0,
+            n_active=37e9, seq_len=4096, n_layers=61, n_heads=128,
+            head_dim=128, peak_flops=197e12 * 1.0)
+    rows.append(("table4/mfu_conventions", 0.0,
+                 f"causal/noncausal ratio="
+                 f"{m['mfu_causal']/m['mfu_noncausal']:.3f} "
+                 f"(paper 385/432={385/432:.3f})"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel micro-benchmarks (interpret mode — correctness-scale only)
+# ---------------------------------------------------------------------------
+
+
+def kernel_benches():
+    rows = []
+    from repro.core import fp8
+    from repro.kernels.fp8_gemm import ops as fops
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    us = _t(fops.fp8_matmul, x, w, use_ref=True)
+    exact = x @ w
+    y = fops.fp8_matmul(x, w, use_ref=True)
+    rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
+    rows.append(("kernel/fp8_gemm_ref", us, f"rel_err_vs_bf16={rel:.4f} "
+                 f"(paper <0.25% loss at model level)"))
+
+    from repro.core import logfmt
+    z = jax.random.normal(jax.random.PRNGKey(2), (512, 512)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(3), (512, 512)))
+    for n in (8, 10):
+        y = logfmt.qdq(z, n)
+        rel = float((jnp.abs(z - y) / jnp.maximum(jnp.abs(z), 1e-9)).mean())
+        e4m3 = fp8.qdq_tile(z)
+        rel8 = float((jnp.abs(z - e4m3) / jnp.maximum(jnp.abs(z), 1e-9)
+                      ).mean())
+        rows.append((f"kernel/logfmt{n}bit", _t(logfmt.qdq, z, n),
+                     f"mean_rel={rel:.4f} vs E4M3={rel8:.4f} "
+                     f"(paper: LogFMT-8 beats E4M3; 10-bit ~ BF16)"))
+
+    from repro.kernels.mla_attention import ops as mops
+    B, H, R, Rr, T = 4, 16, 128, 32, 512
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    qa = jax.random.normal(ks[0], (B, H, R))
+    qr = jax.random.normal(ks[1], (B, H, Rr))
+    ckv = jax.random.normal(ks[2], (B, T, R))
+    kr = jax.random.normal(ks[3], (B, T, Rr))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    qpos = jnp.full((B,), T - 1)
+    us = _t(mops.mla_decode, qa, qr, ckv, kr, pos, qpos, scale=0.1,
+            use_ref=True)
+    rows.append(("kernel/mla_decode_ref", us,
+                 f"latent_cache_bytes={(R+Rr)*2}B/token/layer"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# MTP speculative decoding (paper §2.3.3)
+# ---------------------------------------------------------------------------
+
+
+def mtp_bench():
+    from repro.serve.speculative import SpecDecodeModel, paper_claim
+    rows = [("mtp/paper_operating_point", 0.0,
+             f"accept=0.85 -> {paper_claim().tps_multiplier:.2f}x TPS "
+             f"(paper ~1.8x)")]
+    for acc in (0.5, 0.7, 0.9):
+        m = SpecDecodeModel(acceptance=acc)
+        rows.append((f"mtp/accept_{acc}", 0.0,
+                     f"{m.tps_multiplier:.2f}x TPS"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# EP wire-bytes: flat vs node-limited dedup (paper §4.3 "8t -> Mt")
+# ---------------------------------------------------------------------------
+
+
+def ep_dedup_bytes():
+    from repro.configs.base import get_config
+    cfg = get_config("deepseek-v3-671b")
+    mc = cfg.moe
+    h = cfg.d_model
+    flat = mc.top_k * h * 1 + mc.top_k * h * 2      # worst-case col fanout
+    dedup = mc.group_limit * h * 1 + mc.group_limit * h * 2
+    return [("ep/flat_bytes_per_token", 0.0, f"{flat} (k={mc.top_k} sends)"),
+            ("ep/dedup_bytes_per_token", 0.0,
+             f"{dedup} (M={mc.group_limit} sends, paper's Mt)"),
+            ("ep/reduction", 0.0, f"{flat/dedup:.2f}x fewer wire bytes")]

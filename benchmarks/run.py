@@ -1,0 +1,28 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import paper_tables as pt
+
+    suites = [
+        pt.table1_kv_cache,
+        pt.table2_flops,
+        pt.sec232_tpot,
+        pt.table3_network,
+        pt.fig5_alltoall,
+        pt.table4_schedule,
+        pt.kernel_benches,
+        pt.mtp_bench,
+        pt.ep_dedup_bytes,
+    ]
+    print("name,us_per_call,derived")
+    for suite in suites:
+        for name, us, derived in suite():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

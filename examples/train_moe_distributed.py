@@ -1,0 +1,80 @@
+"""End-to-end distributed MoE training driver (deliverable b): trains a
+~100M-param DeepSeekMoE model for a few hundred steps on an 8-device CPU
+mesh with the paper's full technique stack:
+
+  * expert parallelism with node-limited two-hop dedup dispatch (T3)
+  * FP8 wire precision on dispatch, BF16 combine (T4/§2.3.2)
+  * aux-loss-free router-bias balancing (T2)
+  * checkpoint/restart with a mid-run injected failure (robustness, §6.1)
+
+Run:  PYTHONPATH=src python examples/train_moe_distributed.py [--steps 200]
+(spawns 8 CPU devices in-process)
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.launch.mesh import make_mesh
+from repro.parallel import context as pctx_mod
+from repro.train.fault import FailureInjector
+from repro.train.trainer import Trainer, TrainConfig
+
+
+def hundred_m_moe() -> ModelConfig:
+    """~100M-param DeepSeekMoE config (8 experts top-2 + shared)."""
+    return ModelConfig(
+        name="moe-100m", family="moe", num_layers=8, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=1408, vocab_size=32000,
+        head_dim=64, attention="gqa", rope_theta=10000.0,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=704, num_shared=1,
+                      shared_ff=704, num_groups=4, group_limit=2,
+                      router_bias=True, score_fn="sigmoid",
+                      capacity_factor=1.5, layout="all"),
+        dtype="float32", param_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = hundred_m_moe()
+    from repro.models.api import count_params
+    print(f"model: {count_params(cfg)/1e6:.0f}M params "
+          f"({count_params(cfg, active_only=True)/1e6:.0f}M active)")
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    ctx = pctx_mod.ParallelCtx(mesh=mesh, dp_axes=("data",),
+                               moe_impl="ep_dedup", wire="fp8")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(peak_lr=1e-3, warmup=20, total_steps=args.steps,
+                         ckpt_dir=d, ckpt_every=50,
+                         sdc_check_every=75)
+        inj = FailureInjector({args.steps // 2: "node"})
+        with pctx_mod.use(ctx):
+            tr = Trainer(cfg, tc, injector=inj, global_batch=args.batch,
+                         seq_len=args.seq)
+            out = tr.run(args.steps)
+        h = out["history"]
+        print(f"steps: {out['final_step']}  restarts: {out['restarts']} "
+              f"(injected node failure recovered from checkpoint)")
+        print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
+        print(f"router load (last step drop_frac): "
+              f"{h[-1].get('blocks/drop_frac', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""LogFMT-nBit: logarithmic block floating-point format (paper §3.2, T5).
+
+Per 1x128 tile of activations:
+  * take logs of |x|; min/max over the tile define a per-tile dynamic range
+  * the range is clamped to ``max - log(2^32)`` (≈ E5 exponent coverage)
+  * n-bit code: 1 sign bit + (n-1)-bit index K on a uniform log-space grid
+      code 0        -> exact zero
+      code K>=1     -> sign * exp(min + Step*(K-1)),
+      Step = (max-min) / (2^(n-1) - 2)
+  * rounding happens in the ORIGINAL LINEAR space (paper: required for
+    unbiased activation quantization) — we pick between the two bracketing
+    grid points by linear-domain distance.
+
+Encode returns (codes uint8/uint16, mn fp32/tile, step fp32/tile); decode
+inverts exactly. Used by the compressed collectives (parallel/collectives)
+and benchmarked against E4M3/E5M2 in benchmarks/logfmt_bench.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+TILE = 128
+RANGE_CLAMP = 32.0 * jnp.log(2.0)   # min >= max - log(2^32)
+
+
+def _code_dtype(n_bits: int):
+    if n_bits <= 8:
+        return jnp.uint8
+    if n_bits <= 16:
+        return jnp.uint16
+    raise ValueError(f"LogFMT supports <=16 bits, got {n_bits}")
+
+
+def encode(x: jax.Array, n_bits: int = 8, tile: int = TILE
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (..., d) with d % tile == 0 (pad upstream). Returns
+    (codes same shape (uint), mn (..., d/tile), step (..., d/tile))."""
+    assert x.shape[-1] % tile == 0, x.shape
+    levels = 2 ** (n_bits - 1) - 1          # codes 1..levels on the grid
+    xf = x.astype(jnp.float32)
+    t = xf.reshape(xf.shape[:-1] + (-1, tile))
+    a = jnp.abs(t)
+    nz = a > 0.0
+    loga = jnp.where(nz, jnp.log(jnp.where(nz, a, 1.0)), jnp.inf)
+    mx = jnp.min(jnp.where(nz, -loga, jnp.inf), axis=-1, keepdims=True)
+    mx = -mx                                              # max of logs
+    has_nz = jnp.isfinite(mx)
+    mx = jnp.where(has_nz, mx, 0.0)
+    mn = jnp.min(jnp.where(nz, loga, jnp.inf), axis=-1, keepdims=True)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    mn = jnp.maximum(mn, mx - RANGE_CLAMP)                # paper's E5 clamp
+    step = (mx - mn) / jnp.maximum(levels - 1, 1)
+    step = jnp.maximum(step, 1e-12)
+
+    # linear-space rounding between bracketing grid points
+    tt = jnp.clip((loga - mn) / step, 0.0, levels - 1)
+    k0 = jnp.floor(tt)
+    lo = jnp.exp(mn + step * k0)
+    hi = jnp.exp(mn + step * jnp.minimum(k0 + 1, levels - 1))
+    pick_hi = (a - lo) > (hi - a)
+    k = jnp.where(pick_hi, jnp.minimum(k0 + 1, levels - 1), k0)
+    code = (k + 1.0).astype(jnp.int32)
+    code = jnp.where(nz, code, 0)
+    sign = (t < 0).astype(jnp.int32)
+    packed = (sign << (n_bits - 1)) | code
+    packed = packed.reshape(xf.shape).astype(_code_dtype(n_bits))
+    return packed, mn[..., 0], step[..., 0]
+
+
+def decode(codes: jax.Array, mn: jax.Array, step: jax.Array,
+           n_bits: int = 8, tile: int = TILE,
+           dtype=jnp.bfloat16) -> jax.Array:
+    c = codes.astype(jnp.int32)
+    t = c.reshape(c.shape[:-1] + (-1, tile))
+    sign_mask = 1 << (n_bits - 1)
+    sign = jnp.where((t & sign_mask) != 0, -1.0, 1.0)
+    k = (t & (sign_mask - 1)).astype(jnp.float32)
+    mag = jnp.exp(mn[..., None] + step[..., None] * (k - 1.0))
+    val = jnp.where(k == 0, 0.0, sign * mag)
+    return val.reshape(codes.shape).astype(dtype)
+
+
+def qdq(x: jax.Array, n_bits: int = 8, tile: int = TILE) -> jax.Array:
+    """Quantize-dequantize round trip (for accuracy studies)."""
+    d = x.shape[-1]
+    pad = (-d) % tile
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    c, mn, st = encode(xp, n_bits, tile)
+    y = decode(c, mn, st, n_bits, tile, dtype=jnp.float32)
+    return y[..., :d].astype(x.dtype)
+
+
+def compressed_bits_per_element(n_bits: int, tile: int = TILE) -> float:
+    """Wire cost including per-tile (mn, step) fp32 sideband."""
+    return n_bits + 64.0 / tile

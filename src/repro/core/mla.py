@@ -1,0 +1,179 @@
+"""Multi-head Latent Attention (paper §2.1.2, T1; DeepSeek-V2/V3).
+
+Two execution forms, equivalence-tested against each other:
+
+* **naive** (train/prefill): reconstruct per-head K_nope/V from the latent
+  ``c_kv`` and run standard attention — the GEMM-rich form.
+* **absorbed** (decode): cache only ``(rmsnorm(c_kv), k_rope)`` per token
+  (kv_lora_rank + qk_rope_dim floats — Table 1's 70 KB/token for V3), absorb
+  W_uk into the query and W_uv into the output so each step is GEMVs against
+  the latent cache. This is the memory-bound form the paper analyzes; the
+  Pallas flash-decode kernel (kernels/mla_attention) implements it blockwise.
+
+KV-cache bytes/token/layer = (kv_lora_rank + qk_rope_dim) * dtype_bytes —
+reproduced exactly in benchmarks/table1_kv_cache.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import apply_rope, linear, rmsnorm
+from repro.models.param import ParamSpec
+
+
+def mla_specs(cfg: ModelConfig, layers: int) -> dict:
+    m = cfg.mla
+    assert m is not None
+    d, nh = cfg.d_model, cfg.num_heads
+    pd = cfg.param_dtype
+    L, la = (layers,), ("layers",)
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": ParamSpec(L + (d, m.q_lora_rank), pd, la + ("embed", None), "fan_in"),
+        "q_norm": ParamSpec(L + (m.q_lora_rank,), pd, la + (None,), "ones"),
+        "w_uq": ParamSpec(L + (m.q_lora_rank, nh * qk), pd, la + (None, "heads"), "fan_in"),
+        "w_dkv": ParamSpec(L + (d, m.kv_lora_rank), pd, la + ("embed", None), "fan_in"),
+        "kv_norm": ParamSpec(L + (m.kv_lora_rank,), pd, la + (None,), "ones"),
+        "w_kr": ParamSpec(L + (d, m.qk_rope_dim), pd, la + ("embed", None), "fan_in"),
+        "w_uk": ParamSpec(L + (m.kv_lora_rank, nh * m.qk_nope_dim), pd,
+                          la + (None, "heads"), "fan_in"),
+        "w_uv": ParamSpec(L + (m.kv_lora_rank, nh * m.v_head_dim), pd,
+                          la + (None, "heads"), "fan_in"),
+        "w_o": ParamSpec(L + (nh * m.v_head_dim, d), pd, la + ("heads", "embed"), "fan_in"),
+    }
+
+
+def _queries(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    m = cfg.mla
+    nh = cfg.num_heads
+    cq = rmsnorm(linear(x, p["w_dq"], cfg), p["q_norm"], cfg.rms_eps)
+    q = linear(cq, p["w_uq"], cfg)
+    q = q.reshape(q.shape[:-1] + (nh, m.qk_nope_dim + m.qk_rope_dim))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Per-token cached quantities: normalized latent + shared RoPE key."""
+    m = cfg.mla
+    ckv = rmsnorm(linear(x, p["w_dkv"], cfg), p["kv_norm"], cfg.rms_eps)
+    kr = linear(x, p["w_kr"], cfg)
+    kr = apply_rope(kr[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, kr
+
+
+def mla_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
+                  positions: jax.Array,
+                  return_cache_entries: bool = False):
+    """Naive (train/prefill) MLA: full causal attention.
+
+    x: (B, S, d). Returns out (B, S, d) and optionally the latent cache
+    entries (ckv (B,S,rank), kr (B,S,rope)) for prefill cache fill.
+    """
+    m = cfg.mla
+    nh = cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    ckv, kr = _latents(p, x, cfg, positions)
+    k_nope = linear(ckv, p["w_uk"], cfg).reshape(B, S, nh, m.qk_nope_dim)
+    v = linear(ckv, p["w_uv"], cfg).reshape(B, S, nh, m.v_head_dim)
+
+    # combined-head form: K = [k_nope ; kr] shared-rope concat, so the
+    # chunked attention path (layers.attention_scores) serves MLA too
+    from repro.models.layers import attention_scores
+    from repro.parallel.context import shard_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)        # (B,S,nh,192)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None], (B, S, nh, m.qk_rope_dim))],
+        axis=-1)
+    qq, kk, v = shard_heads(qq), shard_heads(kk), shard_heads(v)
+    out = attention_scores(qq, kk, v, causal=True, q_pos=positions,
+                           k_pos=positions, scale=scale)
+    out = out.reshape(B, S, nh * m.v_head_dim).astype(x.dtype)
+    out = linear(out, p["w_o"], cfg)
+    if return_cache_entries:
+        return out, (ckv, kr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: latent cache + weight-absorbed attention
+# ---------------------------------------------------------------------------
+
+
+def init_mla_cache(cfg: ModelConfig, layers: int, batch: int,
+                   max_len: int) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.cache_dtype_())
+    return dict(
+        ckv=jnp.zeros((layers, batch, max_len, m.kv_lora_rank), dt),
+        kr=jnp.zeros((layers, batch, max_len, m.qk_rope_dim), dt),
+        pos=-jnp.ones((layers, batch, max_len), jnp.int32),
+    )
+
+
+def mla_decode_step(p: dict, cache: dict, x: jax.Array, *,
+                    cfg: ModelConfig, positions: jax.Array,
+                    impl: str = "xla") -> Tuple[jax.Array, dict]:
+    """Absorbed-form decode. x: (B, 1, d); cache leaves are per-layer slices
+    (B, T, ...). Returns (out (B,1,d), new_cache)."""
+    m = cfg.mla
+    nh = cfg.num_heads
+    B = x.shape[0]
+    T = cache["ckv"].shape[1]
+
+    q_nope, q_rope = _queries(p, x, cfg, positions)       # (B,1,nh,*)
+    ckv_new, kr_new = _latents(p, x, cfg, positions)      # (B,1,rank/rope)
+
+    idx = (positions[:, 0] % T).astype(jnp.int32)     # (B,)
+    ba = jnp.arange(B)
+    ckv = cache["ckv"].at[ba, idx].set(ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kr = cache["kr"].at[ba, idx].set(kr_new[:, 0].astype(cache["kr"].dtype))
+    pos = cache["pos"].at[ba, idx].set(positions[:, 0])
+    new_cache = dict(ckv=ckv, kr=kr, pos=pos)
+
+    # absorb W_uk into q:  q_abs[h] = q_nope[h] @ W_uk[h]^T  -> latent space
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, nh, m.qk_nope_dim)
+    q_abs = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))          # (B,1,nh,rank)
+
+    if impl == "pallas":
+        from repro.kernels.mla_attention import ops as mla_ops
+        o_lat = mla_ops.mla_decode(
+            q_abs[:, 0], q_rope[:, 0].astype(jnp.float32), ckv, kr, pos,
+            positions[:, 0], scale=1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim))
+        o_lat = o_lat[:, None]
+    else:
+        scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+        if ckv.dtype != jnp.dtype(cfg.dtype):   # fp8 cache -> compute dtype
+            ckv = ckv.astype(cfg.dtype)
+            kr = kr.astype(cfg.dtype)
+        cdt = ckv.dtype
+        scores = (jnp.einsum("bshc,btc->bhst", q_abs.astype(cdt), ckv,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshr,btr->bhst", q_rope.astype(cdt), kr,
+                               preferred_element_type=jnp.float32)) * scale
+        valid = (pos >= 0) & (pos <= positions)   # (B,T); positions (B,1)
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btc->bshc", attn.astype(cdt), ckv,
+                           preferred_element_type=jnp.float32)
+
+    # absorb W_uv on the way out: out[h] = o_lat[h] @ W_uv[h]
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, nh, m.v_head_dim)
+    out = jnp.einsum("bshc,chv->bshv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, nh * m.v_head_dim).astype(x.dtype)
+    return linear(out, p["w_o"], cfg), new_cache
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Table 1 quantity: latent-cache bytes per token across all layers."""
+    m = cfg.mla
+    return (m.kv_lora_rank + m.qk_rope_dim) * dtype_bytes * cfg.num_layers

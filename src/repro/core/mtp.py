@@ -1,0 +1,88 @@
+"""Multi-Token Prediction module (paper §2.3.3, T6; DeepSeek-V3).
+
+Each MTP module m (depth starts at 1) is a single extra transformer block:
+
+    h'_k = W_proj [ RMSNorm(h_k) ; RMSNorm(Emb(t_{k+m})) ]
+    h_k  = Block_m(h'_k)           -> logits for t_{k+m+1} (shared unemb)
+
+Training adds ``loss_weight``-scaled CE per module; at inference the module
+drafts token t+2 which the next main-model step verifies in parallel
+(serve/speculative.py) — the paper reports 80–90 % acceptance and ~1.8x TPS.
+
+The block itself is supplied by the host model (``block_specs``/
+``block_apply`` callables) so MTP composes with any of the zoo families.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import ParamSpec
+
+
+def mtp_specs(cfg: ModelConfig, block_specs: Callable[[int], dict]) -> dict:
+    d, pd = cfg.d_model, cfg.param_dtype
+    n = cfg.mtp.num_modules
+    L, la = (n,), ("layers",)
+    return {
+        "norm_h": ParamSpec(L + (d,), pd, la + (None,), "ones"),
+        "norm_e": ParamSpec(L + (d,), pd, la + (None,), "ones"),
+        "w_proj": ParamSpec(L + (2 * d, d), pd, la + (None, "embed"), "fan_in"),
+        "block": block_specs(n),
+    }
+
+
+def mtp_hidden(p_m: dict, h: jax.Array, emb_next: jax.Array, *,
+               cfg: ModelConfig, positions: jax.Array,
+               block_apply: Callable) -> jax.Array:
+    """One MTP module. p_m: this module's param slice. h: (B,S,d) hidden
+    from the previous depth; emb_next: (B,S,d) embeddings of tokens shifted
+    by the module depth. Returns the module's output hidden (B,S,d)."""
+    from repro.models.layers import linear
+    x = jnp.concatenate([
+        rmsnorm(h, p_m["norm_h"], cfg.rms_eps),
+        rmsnorm(emb_next, p_m["norm_e"], cfg.rms_eps)], axis=-1)
+    x = linear(x, p_m["w_proj"], cfg)
+    return block_apply(p_m["block"], x, positions)
+
+
+def mtp_losses(p: dict, h: jax.Array, tokens: jax.Array, emb_fn: Callable,
+               unemb_fn: Callable, *, cfg: ModelConfig,
+               positions: jax.Array, block_apply: Callable) -> jax.Array:
+    """Summed weighted CE over MTP depths. tokens: (B,S) inputs; target of
+    depth m at position k is tokens[k+m+1]. Returns scalar loss."""
+    n = cfg.mtp.num_modules
+    B, S = tokens.shape
+    total = 0.0
+    for m in range(1, n + 1):
+        pm = jax.tree.map(lambda x: x[m - 1], p)
+        # input tokens shifted by m: at position k we feed Emb(t_{k+m})
+        shifted = jnp.roll(tokens, -m, axis=1)
+        h = mtp_hidden(pm, h, emb_fn(shifted), cfg=cfg,
+                       positions=positions, block_apply=block_apply)
+        logits = unemb_fn(h)                            # (B,S,V)
+        targets = jnp.roll(tokens, -(m + 1), axis=1)
+        valid = jnp.arange(S) < S - (m + 1)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 targets[..., None], axis=-1)[..., 0]
+        ce = jnp.where(valid[None, :], lse - ll, 0.0)
+        total = total + cfg.mtp.loss_weight / n * (
+            ce.sum() / jnp.maximum(valid.sum() * B, 1))
+    return total
+
+
+def mtp_draft(p: dict, h_last: jax.Array, emb_next: jax.Array, *,
+              cfg: ModelConfig, positions: jax.Array,
+              block_apply: Callable, unemb_fn: Callable) -> jax.Array:
+    """Decode-time draft: given the main model's last hidden h_last (B,1,d)
+    and the embedding of the token it just produced, return draft logits
+    for the token after next. Uses module depth 1."""
+    pm = jax.tree.map(lambda x: x[0], p)
+    h = mtp_hidden(pm, h_last, emb_next, cfg=cfg, positions=positions,
+                   block_apply=block_apply)
+    return unemb_fn(h)

@@ -1,0 +1,97 @@
+"""Node-limited TopK expert selection (paper §4.3, T3) + aux-loss-free
+bias balancing (DeepSeek-V3).
+
+Experts are partitioned into ``num_groups`` groups ("nodes" in the paper;
+model-axis shard neighborhoods in our TPU mapping — DESIGN.md §2). Each
+token may select experts from at most ``group_limit`` groups, which bounds
+the deduplicated dispatch fanout M and therefore the slow-fabric bytes:
+IB cost 8t -> Mt in the paper; all-to-all group-buffers on the model axis
+here.
+
+Selection pipeline (DeepSeek-V3 semantics):
+  scores  = score_fn(x @ Wg)                     (sigmoid for V3)
+  select  on scores + bias (bias is the aux-free balancing knob,
+           used for SELECTION only, never for the mixture weights)
+  group_score(g) = sum of top-``group_top`` biased scores in group g
+  keep top-``group_limit`` groups, mask the rest, take top-k experts
+  weights = scores of the selected experts (unbiased), optionally
+           renormalized to sum 1, times route_scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+class RouteResult(NamedTuple):
+    expert_idx: jax.Array    # (..., k) int32
+    weights: jax.Array       # (..., k) fp32
+    scores: jax.Array        # (..., E) fp32 post-activation scores
+    load: jax.Array          # (E,) fraction of assignments per expert
+    aux_loss: jax.Array      # scalar switch-style aux loss (diagnostic)
+
+
+def route(x: jax.Array, w_gate: jax.Array, cfg: MoEConfig,
+          bias: jax.Array | None = None) -> RouteResult:
+    """x: (..., d); w_gate: (d, E); bias: (E,) or None."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        w_gate.astype(jnp.float32))
+    if cfg.score_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    elif cfg.score_fn == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    else:
+        raise ValueError(cfg.score_fn)
+
+    sel = scores if bias is None else scores + bias
+    E, G = cfg.num_experts, cfg.num_groups
+    epg = E // G
+
+    if cfg.group_limit < G:
+        # --- node-limited masking -------------------------------------
+        gsel = sel.reshape(sel.shape[:-1] + (G, epg))
+        top_in_group = jax.lax.top_k(gsel, min(cfg.group_top, epg))[0]
+        group_score = top_in_group.sum(-1)                   # (..., G)
+        _, top_groups = jax.lax.top_k(group_score, cfg.group_limit)
+        gmask = jax.nn.one_hot(top_groups, G, dtype=jnp.bool_).any(-2)
+        emask = jnp.repeat(gmask, epg, axis=-1)
+        sel = jnp.where(emask, sel, -jnp.inf)
+
+    _, expert_idx = jax.lax.top_k(sel, cfg.top_k)
+    expert_idx = expert_idx.astype(jnp.int32)
+    weights = jnp.take_along_axis(scores, expert_idx, axis=-1)
+    if cfg.route_norm:
+        weights = weights / jnp.maximum(
+            weights.sum(-1, keepdims=True), 1e-20)
+    weights = weights * cfg.route_scale
+
+    # --- balancing diagnostics ----------------------------------------
+    flat_idx = expert_idx.reshape(-1)
+    load = jnp.bincount(flat_idx, length=E) / jnp.maximum(flat_idx.size, 1)
+    mean_score = scores.reshape(-1, E).mean(0)
+    # switch-transformer style aux loss (diagnostic only when bias-based
+    # balancing is on; DeepSeek-V3 is aux-loss-free)
+    aux = E * jnp.sum(load * mean_score)
+    return RouteResult(expert_idx, weights.astype(jnp.float32),
+                       scores, load, aux)
+
+
+def groups_per_token(expert_idx: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Number of distinct expert groups each token touches (== the paper's
+    M, the deduplicated inter-node message count). Invariant under test:
+    M <= cfg.group_limit."""
+    g = expert_idx // (cfg.num_experts // cfg.num_groups)
+    onehot = jax.nn.one_hot(g, cfg.num_groups, dtype=jnp.bool_)
+    return onehot.any(-2).sum(-1)
+
+
+def update_bias(bias: jax.Array, load: jax.Array, lr: float = 1e-3
+                ) -> jax.Array:
+    """Aux-loss-free balancing: push bias up for under-loaded experts,
+    down for over-loaded ones (DeepSeek-V3 §loadbalance; sign update)."""
+    target = 1.0 / bias.shape[0]
+    return bias + lr * jnp.sign(target - load)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots. Each subpackage:
+<name>.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit wrapper),
+ref.py (pure-jnp oracle; tests assert allclose across shape/dtype sweeps).
+
+  fp8_gemm/       fine-grained-scaled FP8 GEMM (DeepGEMM -> TPU, T4)
+  mla_attention/  MLA absorbed-decode flash kernel over the latent cache (T1)
+  logfmt/         LogFMT-nBit encode/decode (T5)
+  moe_gemm/       grouped expert GEMM (T2)
+
+Kernels target TPU (MXU-aligned 128 tiles, fp32 accumulation) and are
+validated with interpret=True on CPU per the assignment.
+"""

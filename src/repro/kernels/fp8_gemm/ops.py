@@ -1,0 +1,40 @@
+"""Jit'd public wrapper: quantize + kernel dispatch with shape padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fp8
+from repro.kernels.fp8_gemm.fp8_gemm import BLOCK, fp8_gemm
+from repro.kernels.fp8_gemm.ref import fp8_gemm_ref
+
+
+def _pad(x, axis, mult):
+    n = x.shape[axis]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, p)
+    return jnp.pad(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "use_ref",
+                                             "interpret"))
+def fp8_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
+               use_ref: bool = False, interpret: bool = True) -> jax.Array:
+    """y = Q(x) @ Q(w) with fine-grained scales. x: (M, K); w: (K, N)."""
+    M, K = x.shape
+    _, N = w.shape
+    xp = _pad(_pad(x, 0, bm), 1, BLOCK)
+    wp = _pad(_pad(w, 0, BLOCK), 1, bn)
+    xq, xs = fp8.quantize_tilewise(xp)
+    wq, ws = fp8.quantize_blockwise(wp)
+    if use_ref:
+        y = fp8_gemm_ref(xq, xs, wq, ws)
+    else:
+        y = fp8_gemm(xq, xs, wq, ws, bm=min(bm, xp.shape[0]),
+                     bn=min(bn, wp.shape[1]), interpret=interpret)
+    return y[:M, :N]

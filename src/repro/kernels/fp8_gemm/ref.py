@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fine-grained-scaled FP8 GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def fp8_gemm_ref(xq: jax.Array, xs: jax.Array, wq: jax.Array,
+                 ws: jax.Array) -> jax.Array:
+    """Dequantize-then-matmul in fp32 — mathematically identical to per-tile
+    scaled accumulation because scales are constant within each K group."""
+    M, K = xq.shape
+    _, N = wq.shape
+    kb, nb = K // BLOCK, N // BLOCK
+    x = xq.astype(jnp.float32).reshape(M, kb, BLOCK) * xs[..., None]
+    x = x.reshape(M, K)
+    w = wq.astype(jnp.float32).reshape(kb, BLOCK, nb, BLOCK)
+    w = (w * ws[:, None, :, None]).reshape(K, N)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,30 @@
+"""Jit'd wrappers: reshape any (..., D) activation to 2D and run the
+LogFMT codec kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.logfmt.logfmt import logfmt_decode, logfmt_encode
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
+def encode(x: jax.Array, *, n_bits: int = 8, interpret: bool = True):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    codes, mn, step = logfmt_encode(x2, n_bits=n_bits, interpret=interpret)
+    return (codes.reshape(shape), mn.reshape(shape[:-1] + (-1,)),
+            step.reshape(shape[:-1] + (-1,)))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "dtype", "interpret"))
+def decode(codes: jax.Array, mn: jax.Array, step: jax.Array, *,
+           n_bits: int = 8, dtype=jnp.bfloat16, interpret: bool = True):
+    shape = codes.shape
+    y = logfmt_decode(codes.reshape(-1, shape[-1]),
+                      mn.reshape(-1, mn.shape[-1]),
+                      step.reshape(-1, step.shape[-1]),
+                      n_bits=n_bits, dtype=dtype, interpret=interpret)
+    return y.reshape(shape)

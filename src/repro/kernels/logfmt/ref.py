@@ -1,0 +1,5 @@
+"""Oracle: the pure-jnp LogFMT codec from repro.core.logfmt."""
+from repro.core.logfmt import decode as logfmt_decode_ref
+from repro.core.logfmt import encode as logfmt_encode_ref
+
+__all__ = ["logfmt_encode_ref", "logfmt_decode_ref"]

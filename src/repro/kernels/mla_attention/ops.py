@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the MLA flash-decode kernel (pads T to the block)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mla_attention.mla_attention import mla_decode_kernel
+from repro.kernels.mla_attention.ref import mla_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bt", "use_ref",
+                                             "interpret"))
+def mla_decode(q_abs, q_rope, ckv, kr, pos, qpos, *, scale: float,
+               bt: int = 256, use_ref: bool = False,
+               interpret: bool = True):
+    if use_ref:
+        return mla_decode_ref(q_abs, q_rope, ckv, kr, pos, qpos, scale=scale)
+    T = ckv.shape[1]
+    bt = min(bt, T)
+    padT = (-T) % bt
+    if padT:
+        pw3 = [(0, 0), (0, padT), (0, 0)]
+        ckv = jnp.pad(ckv, pw3)
+        kr = jnp.pad(kr, pw3)
+        pos = jnp.pad(pos, [(0, 0), (0, padT)], constant_values=-1)
+    return mla_decode_kernel(q_abs, q_rope, ckv, kr, pos, qpos,
+                             scale=scale, bt=bt, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the MLA absorbed-decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mla_decode_ref(q_abs, q_rope, ckv, kr, pos, qpos, *, scale):
+    """q_abs: (B,H,R); q_rope: (B,H,Rr); ckv: (B,T,R); kr: (B,T,Rr);
+    pos: (B,T) int32 (-1 empty); qpos: (B,). Returns (B,H,R) fp32."""
+    s = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    valid = (pos >= 0) & (pos <= qpos[:, None])
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))

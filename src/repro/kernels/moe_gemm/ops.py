@@ -1,0 +1,34 @@
+"""Jit'd wrapper with padding for ragged capacity/feature dims."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+def _pad(x, axis, mult):
+    p = (-x.shape[axis]) % mult
+    if p == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, p)
+    return jnp.pad(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref", "interpret"))
+def grouped_matmul(x: jax.Array, w: jax.Array, *, use_ref: bool = False,
+                   interpret: bool = True) -> jax.Array:
+    """x: (E, C, D) @ w: (E, D, F) -> (E, C, F)."""
+    if use_ref:
+        return moe_gemm_ref(x, w)
+    E, C, D = x.shape
+    F = w.shape[-1]
+    bc = 128 if C % 128 == 0 else 8
+    xp = _pad(_pad(x, 1, bc), 2, 128)
+    wp = _pad(_pad(w, 1, 128), 2, 128)
+    y = moe_gemm(xp, wp, bc=bc, bf=128, bk=128, interpret=interpret)
+    return y[:, :C, :F]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F), fp32 accumulation."""
+    y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.astype(x.dtype)

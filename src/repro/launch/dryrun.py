@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the right
+step function on the production mesh with ShapeDtypeStruct stand-ins (no
+allocation), print memory_analysis / cost_analysis, parse collective bytes
+from the compiled HLO, and persist everything to results/dryrun/*.json for
+the roofline report (launch/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch yi-34b]
+        [--shape train_4k] [--multi-pod] [--moe-impl ep_dedup]
+        [--remat full] [--out results/dryrun]
+
+Phase -> step fn:
+    train_4k      train_step  (loss + grads + AdamW update, remat=full)
+    prefill_32k   prefill     (logits + cache assembly)
+    decode_32k / long_500k    serve_step (one token against the cache)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ShapeCfg, get_config, list_archs,
+                                shape_applicable)
+from repro.launch.mesh import dp_axes_for, make_production_mesh
+from repro.models.api import build_model
+from repro.parallel import context as pctx_mod
+from repro.parallel import sharding as shd
+from repro.train import optimizer as optim
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s64": 8, "u64": 8}
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum bytes over every dtype[dims] group in an HLO result type
+    (handles tuple-result collectives like batched all-to-all)."""
+    total = 0.0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind from the compiled HLO,
+    with while-loop bodies multiplied by their known_trip_count (layer
+    scans execute their collectives L times — counting ops once would
+    undercount loop-resident EP/FSDP traffic by ~L)."""
+    # 1. split into computations
+    comps: Dict[str, list] = {}
+    name = None
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        m = re.match(r"\s*(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$", ls)
+        if m:
+            name = m.group(1)
+            comps[name] = []
+            if ls.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = comps[name]
+            continue
+        if name is not None:
+            comps[name].append(ls)
+
+    def direct_and_children(body):
+        out = {k: 0.0 for k in COLLECTIVES}
+        counts = {k: 0 for k in COLLECTIVES}
+        children = []   # (body_name, trip)
+        for line in body:
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            wm = re.search(r"\bwhile\(", rhs)
+            if wm:
+                bm = re.search(r"body=(%[\w\.\-]+)", rhs)
+                tm = re.search(r'known_trip_count[^0-9]*([0-9]+)', rhs)
+                if bm:
+                    children.append((bm.group(1),
+                                     int(tm.group(1)) if tm else 1))
+                continue
+            cm = re.search(r"\bcall\(|\bconditional\(", rhs)
+            if cm:
+                for sub in re.findall(
+                        r"(?:to_apply|branch_computations=\{?|"
+                        r"true_computation=|false_computation=)"
+                        r"(%[\w\.\-]+)", rhs):
+                    children.append((sub, 1))
+            for k in COLLECTIVES:
+                ik = rhs.find(k + "(")
+                if ik < 0:
+                    continue
+                nbytes = _shape_bytes(rhs[:ik])
+                if nbytes == 0:
+                    break
+                if k == "reduce-scatter":
+                    g = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+                    nbytes *= len(g.group(1).split(",")) if g else 1
+                out[k] += nbytes
+                counts[k] += 1
+                break
+        return out, counts, children
+
+    cache: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in cache or depth > 20 or name not in comps:
+            return cache.get(name, {k: 0.0 for k in COLLECTIVES})
+        out, counts, children = direct_and_children(comps[name])
+        for child, trip in children:
+            sub = total(child, depth + 1)
+            for k in COLLECTIVES:
+                out[k] += trip * sub[k]
+        cache[name] = out
+        return out
+
+    out = total("__entry__")
+    # counts: plain op counts (diagnostic only)
+    all_counts = {k: 0 for k in COLLECTIVES}
+    for body in comps.values():
+        _, c, _ = direct_and_children(body)
+        for k in COLLECTIVES:
+            all_counts[k] += c[k]
+    out["counts"] = all_counts
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               moe_impl: str = "ep_dedup", remat: str = "full",
+               fp8: bool | None = None, cache_dtype: str = "",
+               wire: str = "fp8", expert_dtype: str = "",
+               pin_attn: bool = True):
+    """Returns (step_fn, args_structs, in_shardings, pctx) for a cell."""
+    import dataclasses
+    cfg = get_config(arch)
+    if fp8 is not None:
+        cfg = dataclasses.replace(cfg, fp8=fp8)
+    if cache_dtype:
+        cfg = dataclasses.replace(cfg, cache_dtype=cache_dtype)
+    if expert_dtype:
+        cfg = dataclasses.replace(cfg, expert_dtype=expert_dtype, fp8=False)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes_for(mesh)
+    model = build_model(cfg)
+
+    phase = shape.phase
+    rules = shd.rules_for(cfg, phase, multi_pod)
+    pshard = shd.param_shardings(mesh, model.specs(), rules)
+    pstructs = model.param_structs()
+    inputs = model.input_specs(shape)
+    ishard = shd.input_shardings(mesh, inputs, dp)
+
+    ctx = pctx_mod.ParallelCtx(
+        mesh=mesh, dp_axes=dp, ep_axis="model",
+        moe_impl=(moe_impl if cfg.moe else "local"),
+        ep_ftp=(phase == "decode"), wire=wire, pin_attn=pin_attn,
+        remat=(remat if phase == "train" else "none"),
+        seq_axis=("model" if phase == "train" else None))
+
+    if phase == "train":
+        opt_structs = jax.eval_shape(optim.init, pstructs)
+        oshard = optim.AdamWState(
+            step=NamedSharding(mesh, P()),
+            master=pshard,
+            m=jax.tree.map(lambda s: s, pshard),
+            v=jax.tree.map(lambda s: s, pshard))
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                loss, metrics = model.loss(p, batch)
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, _ = optim.update(
+                grads, opt_state, params, lr=1e-4)
+            return params, opt_state, loss
+
+        args = (pstructs, opt_structs, inputs)
+        shards = (pshard, oshard, ishard)
+        return train_step, args, shards, ctx, mesh, model
+
+    if phase == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return prefill_step, (pstructs, inputs), (pshard, ishard), ctx, \
+            mesh, model
+
+    def serve_step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+
+    args = (pstructs, inputs["cache"], inputs["tokens"], inputs["positions"])
+    shards = (pshard, ishard["cache"], ishard["tokens"], ishard["positions"])
+    return serve_step, args, shards, ctx, mesh, model
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             moe_impl: str = "ep_dedup", remat: str = "full",
+             out_dir: str = "results/dryrun", tag: str = "",
+             fp8: bool | None = None, cache_dtype: str = "",
+             wire: str = "fp8", expert_dtype: str = "",
+             pin_attn: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "moe_impl": moe_impl, "remat": remat, "tag": tag,
+           "cache_dtype": cache_dtype, "expert_dtype": expert_dtype}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        step_fn, args, shards, ctx, mesh, model = build_cell(
+            arch, shape_name, multi_pod=multi_pod, moe_impl=moe_impl,
+            remat=remat, fp8=fp8, cache_dtype=cache_dtype, wire=wire,
+            expert_dtype=expert_dtype, pin_attn=pin_attn)
+        donate = {"train": (0, 1), "prefill": (), "decode": (1,)}[
+            SHAPES[shape_name].phase]
+        with pctx_mod.use(ctx):
+            jitted = jax.jit(step_fn, in_shardings=shards,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_dev = mesh.devices.size
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            devices=int(n_dev),
+            flops_per_device=float(cost.get("flops", -1)) if cost else -1,
+            bytes_per_device=float(cost.get("bytes accessed", -1))
+            if cost else -1,
+            memory_analysis=_mem_dict(mem),
+            f32_staging_bytes=f32_staging_bytes(hlo),
+            collectives=coll,
+            hlo_bytes=len(hlo),
+        )
+        rec["temp_corrected"] = max(
+            0, rec["memory_analysis"].get("temp_size_in_bytes", 0)
+            - rec["f32_staging_bytes"])
+        print(f"[dryrun] {arch} x {shape_name} pod={multi_pod} OK "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll={coll['total']/1e6:.1f}MB/dev")
+        print(f"  memory_analysis: {rec['memory_analysis']}")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name} pod={multi_pod} FAILED: "
+              f"{type(e).__name__}: {str(e)[:300]}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "_pod" if multi_pod else ""
+        tagstr = f"_{tag}" if tag else ""
+        fn = f"{arch}__{shape_name}{suffix}{tagstr}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def f32_staging_bytes(hlo_text: str) -> int:
+    """XLA:CPU computes bf16 GEMMs by upcasting operands to f32 and hoists
+    those converts out of layer loops, materializing f32 copies of whole
+    (L, ...) weight/cache stacks. TPU (native bf16 MXU) never allocates
+    these. We quantify the artifact: f32 tensors whose exact shape also
+    appears as bf16 in the module (one per distinct shape) and report a
+    corrected temp figure alongside the raw one."""
+    shapes = {}
+    for m in re.finditer(r"(f32|bf16)\[([0-9,]+)\]", hlo_text):
+        shapes.setdefault(m.group(2), set()).add(m.group(1))
+    total = 0
+    for dims, dts in shapes.items():
+        if dts >= {"f32", "bf16"}:
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            if n * 4 >= 64 * 2**20:      # only count big staging buffers
+                total += n * 4
+    return total
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    if not out:
+        out["repr"] = str(mem)[:500]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-impl", default="ep_dedup",
+                    choices=["ep_flat", "ep_dedup", "local"])
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--fp8", default=None, choices=["on", "off"])
+    ap.add_argument("--cache-dtype", default="")
+    ap.add_argument("--wire", default="fp8", choices=["fp8", "bf16", "fp32"])
+    ap.add_argument("--expert-dtype", default="")
+    ap.add_argument("--no-pin-attn", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    fp8 = None if args.fp8 is None else (args.fp8 == "on")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(
+                    arch, shape, multi_pod=mp, moe_impl=args.moe_impl,
+                    remat=args.remat, out_dir=args.out, tag=args.tag,
+                    fp8=fp8, cache_dtype=args.cache_dtype,
+                    wire=args.wire, expert_dtype=args.expert_dtype,
+                    pin_attn=not args.no_pin_attn))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n[dryrun] done: {ok} ok, {skip} skipped, {err} errors "
+          f"of {len(results)} cells")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

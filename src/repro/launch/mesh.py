@@ -1,0 +1,31 @@
+"""Production mesh construction (assignment-fixed shapes).
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+axis is the scarce DCN/optical fabric (the paper's IB analogue); EP
+all-to-all is confined to intra-pod axes by construction (DESIGN.md §5).
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first backend init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh for tests/examples (e.g. (1, 2, 4) or a pipe axis)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes_for(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,68 @@
+"""Training launcher: ``PYTHONPATH=src python -m repro.launch.train
+--arch <id> [--smoke] [--steps N] [--mesh dxm] ...``
+
+On real hardware the same entry point runs under multi-host jax.distributed
+(one process per host; jax.make_mesh spans hosts transparently). In this
+container it runs CPU-scale smoke configs end-to-end with the full
+substrate: FSDP+TP sharding, EP MoE, fault tolerance, checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host device count (spawns CPU devices)")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 -> mesh (data=2, model=4) with EP MoE")
+    ap.add_argument("--moe-impl", default="ep_dedup")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.configs.base import get_config, smoke_config
+    from repro.launch.mesh import make_mesh
+    from repro.parallel import context as pctx_mod
+    from repro.train.trainer import Trainer, TrainConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+
+    ctx = pctx_mod.ParallelCtx()
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[:len(shape)]
+                         if len(shape) == 2 else ("pod", "data", "model"))
+        ctx = pctx_mod.ParallelCtx(
+            mesh=mesh, dp_axes=("data",),
+            moe_impl=args.moe_impl if cfg.moe else "local")
+    tc = TrainConfig(peak_lr=args.lr, warmup=max(args.steps // 10, 1),
+                     total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=max(args.steps // 4, 1))
+    with pctx_mod.use(ctx):
+        tr = Trainer(cfg, tc, global_batch=args.batch, seq_len=args.seq)
+        out = tr.run(args.steps)
+    h = out["history"]
+    print(f"[train] {args.arch}: step {out['final_step']}, "
+          f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}, "
+          f"restarts {out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,572 @@
+"""Unified Model API.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+suitable for jit/pjit:
+
+    specs()                        ParamSpec pytree (source of truth)
+    init(rng)                      materialized params
+    loss(params, batch, rng)       (scalar, metrics) — teacher forcing (+MTP)
+    prefill(params, batch)         (logits_last, cache)
+    decode_step(params, cache, tokens, positions) (logits, cache)
+    init_cache(batch, max_len)     cache pytree (zeros)
+    input_specs(shape_cfg)         ShapeDtypeStruct stand-ins per phase
+
+Models are assembled from scanned **segments**; each segment is a stack of
+identical blocks (dense / moe / pattern / ssd / rg-lru / decoder / ...)
+whose params are stored stacked along the leading axis, so HLO size is
+O(#segments), not O(depth) — required for 100-layer archs to compile fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.core import mla as mla_mod
+from repro.core import mtp as mtp_mod
+from repro.models import layers as Lyr
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.param import (ParamSpec, count, init_params, param_structs,
+                                spec_axes)
+
+
+# ---------------------------------------------------------------------------
+# Segment table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str        # dense | moe | dense_moe | vision_pattern | encoder |
+                     # decoder | ssd | rg3 | rg_tail
+    n: int           # scan length
+    window: int = 0  # sliding window for attention blocks (0 = full)
+
+
+def _segments(cfg: ModelConfig) -> List[Segment]:
+    L = cfg.num_layers
+    if cfg.family == "dense":
+        return [Segment("blocks", "dense", L)]
+    if cfg.family == "moe":
+        lay = cfg.moe.layout
+        if lay == "all":
+            return [Segment("blocks", "moe", L)]
+        if lay.startswith("dense_first:"):
+            n0 = int(lay.split(":")[1])
+            return [Segment("dense0", "dense", n0),
+                    Segment("blocks", "moe", L - n0)]
+        if lay.startswith("interleave:"):
+            k = int(lay.split(":")[1])
+            assert k == 2 and L % 2 == 0, (lay, L)
+            return [Segment("pat", "dense_moe", L // 2)]
+        raise ValueError(lay)
+    if cfg.family == "vlm":
+        assert L % cfg.cross_attn_every == 0
+        return [Segment("pat", "vision_pattern", L // cfg.cross_attn_every)]
+    if cfg.family == "encdec":
+        return [Segment("dec", "decoder", L)]
+    if cfg.family == "ssm":
+        return [Segment("blocks", "ssd", L)]
+    if cfg.family == "hybrid":
+        plen = len(cfg.rglru.pattern)
+        segs = [Segment("pat", "rg3", L // plen, window=cfg.rglru.window)]
+        if L % plen:
+            segs.append(Segment("tail", "rg_tail", 1))
+        return segs
+    raise ValueError(cfg.family)
+
+
+def _rg_tail_len(cfg: ModelConfig) -> int:
+    return cfg.num_layers % len(cfg.rglru.pattern)
+
+
+# --- per-kind specs ---------------------------------------------------------
+
+
+def _kind_specs(cfg: ModelConfig, seg: Segment) -> dict:
+    n = seg.n
+    if seg.kind == "dense":
+        return tfm.dense_block_specs(cfg, (n,))
+    if seg.kind == "moe":
+        return tfm.moe_block_specs(cfg, (n,))
+    if seg.kind == "dense_moe":
+        return {"dense": tfm.dense_block_specs(cfg, (n,)),
+                "moe": tfm.moe_block_specs(cfg, (n,))}
+    if seg.kind == "vision_pattern":
+        k = cfg.cross_attn_every - 1
+        return {"cross": tfm.cross_block_specs(cfg, (n,)),
+                "selfs": tfm.dense_block_specs(cfg, (n, k))}
+    if seg.kind == "encoder":
+        return tfm.dense_block_specs(cfg, (n,))
+    if seg.kind == "decoder":
+        return tfm.decoder_block_specs(cfg, (n,))
+    if seg.kind == "ssd":
+        return ssm_mod.ssd_block_specs(cfg, (n,))
+    if seg.kind == "rg3":
+        specs = {}
+        for i, kind in enumerate(cfg.rglru.pattern):
+            if kind == "recurrent":
+                specs[f"r{i}"] = rg_mod.recurrent_block_specs(cfg, (n,))
+            else:
+                specs[f"a{i}"] = tfm.dense_block_specs(cfg, (n,))
+        return specs
+    if seg.kind == "rg_tail":
+        t = _rg_tail_len(cfg)
+        return {f"r{i}": rg_mod.recurrent_block_specs(cfg, (1,))
+                for i in range(t)}
+    raise ValueError(seg.kind)
+
+
+# --- per-kind apply ---------------------------------------------------------
+
+
+def _apply_kind(seg: Segment, p: dict, x: jax.Array, cfg: ModelConfig,
+                ctx: dict, cache):
+    """One scan step of segment ``seg``. cache: per-step slice or None."""
+    ctx = dict(ctx, window=seg.window)
+    if seg.kind in ("dense", "moe"):
+        return tfm.block_apply(p, x, cfg, ctx, cache)
+    if seg.kind == "dense_moe":
+        c1 = cache["dense"] if cache else None
+        c2 = cache["moe"] if cache else None
+        x, nc1, _ = tfm.block_apply(p["dense"], x, cfg, ctx, c1)
+        x, nc2, st = tfm.block_apply(p["moe"], x, cfg, ctx, c2)
+        nc = None if nc1 is None and nc2 is None else {"dense": nc1, "moe": nc2}
+        return x, nc, st
+    if seg.kind == "vision_pattern":
+        x, _, _ = tfm.cross_block_apply(p["cross"], x, cfg, ctx, None)
+
+        def body(h, xs):
+            ps, cs = xs
+            h, nc, _ = tfm.block_apply(ps, h, cfg, ctx, cs)
+            return h, nc
+
+        inner_cache = cache["selfs"] if cache else None
+        x, ncs = jax.lax.scan(body, x, (p["selfs"], inner_cache))
+        return x, (None if ncs is None else {"selfs": ncs}), {}
+    if seg.kind == "encoder":
+        return tfm.encoder_block_apply(p, x, cfg, ctx, cache)
+    if seg.kind == "decoder":
+        return tfm.decoder_block_apply(p, x, cfg, ctx, cache)
+    if seg.kind == "ssd":
+        return ssm_mod.ssd_block_apply(p, x, cfg, ctx, cache)
+    if seg.kind == "rg3":
+        ncs = {}
+        st: dict = {}
+        for i, kind in enumerate(cfg.rglru.pattern):
+            key = f"r{i}" if kind == "recurrent" else f"a{i}"
+            sub_cache = cache[key] if cache else None
+            if kind == "recurrent":
+                x, nc, _ = rg_mod.recurrent_block_apply(p[key], x, cfg, ctx,
+                                                        sub_cache)
+            else:
+                x, nc, _ = tfm.block_apply(p[key], x, cfg, ctx, sub_cache)
+            ncs[key] = nc
+        if all(v is None for v in ncs.values()):
+            return x, None, st
+        return x, ncs, st
+    if seg.kind == "rg_tail":
+        ncs = {}
+        for i in range(_rg_tail_len(cfg)):
+            key = f"r{i}"
+            sub_cache = cache[key] if cache else None
+            x, nc, _ = rg_mod.recurrent_block_apply(p[key], x, cfg, ctx,
+                                                    sub_cache)
+            ncs[key] = nc
+        if all(v is None for v in ncs.values()):
+            return x, None, {}
+        return x, ncs, {}
+    raise ValueError(seg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Cache init per kind
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache(cfg: ModelConfig, seg: Segment, batch: int, max_len: int):
+    n = seg.n
+    T = max_len
+    if seg.kind in ("dense", "encoder"):
+        if cfg.attention == "mla":
+            return mla_mod.init_mla_cache(cfg, n, batch, T)
+        return Lyr.init_gqa_cache(cfg, n, batch, T, window=seg.window)
+    if seg.kind == "moe":
+        if cfg.attention == "mla":
+            return mla_mod.init_mla_cache(cfg, n, batch, T)
+        return Lyr.init_gqa_cache(cfg, n, batch, T, window=seg.window)
+    if seg.kind == "dense_moe":
+        return {"dense": Lyr.init_gqa_cache(cfg, n, batch, T),
+                "moe": Lyr.init_gqa_cache(cfg, n, batch, T)}
+    if seg.kind == "vision_pattern":
+        k = cfg.cross_attn_every - 1
+        inner = Lyr.init_gqa_cache(cfg, k, batch, T)
+        return {"selfs": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape), inner)}
+    if seg.kind == "decoder":
+        return Lyr.init_gqa_cache(cfg, n, batch, T)
+    if seg.kind == "ssd":
+        return ssm_mod.init_ssd_cache(cfg, n, batch)
+    if seg.kind == "rg3":
+        out = {}
+        for i, kind in enumerate(cfg.rglru.pattern):
+            if kind == "recurrent":
+                out[f"r{i}"] = rg_mod.init_rglru_cache(cfg, n, batch)
+            else:
+                out[f"a{i}"] = Lyr.init_gqa_cache(cfg, n, batch, T,
+                                                  window=seg.window)
+        return out
+    if seg.kind == "rg_tail":
+        return {f"r{i}": rg_mod.init_rglru_cache(cfg, 1, batch)
+                for i in range(_rg_tail_len(cfg))}
+    raise ValueError(seg.kind)
+
+
+# ---------------------------------------------------------------------------
+# The Model
+# ---------------------------------------------------------------------------
+
+
+def _embed_specs(cfg: ModelConfig) -> dict:
+    d, V, pd = cfg.d_model, cfg.vocab_size, cfg.param_dtype
+    specs = {
+        "emb": ParamSpec((V, d), pd, ("vocab", "embed"), "normal"),
+        "final_norm": ParamSpec((d,), pd, (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unemb"] = ParamSpec((d, V), pd, ("embed", "vocab"), "fan_in")
+    return specs
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = _segments(cfg)
+
+    # -- specs / init ------------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"embed": _embed_specs(cfg)}
+        for seg in self.segments:
+            s[seg.name] = _kind_specs(cfg, seg)
+        if cfg.encoder_layers:
+            enc = Segment("enc", "encoder", cfg.encoder_layers)
+            s["enc"] = _kind_specs(cfg, enc)
+            s["enc_norm"] = ParamSpec((cfg.d_model,), cfg.param_dtype,
+                                      (None,), "ones")
+        if cfg.mtp:
+            s["mtp"] = mtp_mod.mtp_specs(
+                cfg, lambda n: tfm.dense_block_specs(
+                    cfg, (n,), d_ff=cfg.d_ff))
+        return s
+
+    def init(self, rng: jax.Array):
+        return init_params(self.specs(), rng)
+
+    def param_structs(self):
+        return param_structs(self.specs())
+
+    # -- shared pieces -------------------------------------------------------
+    def _embed(self, params, tokens):
+        from repro.parallel.context import shard_act
+        e = params["embed"]["emb"][tokens]
+        return shard_act(e.astype(self.cfg.dtype))
+
+    def _unembed(self, params, h):
+        from repro.parallel.context import shard_act
+        emb = params["embed"]
+        h = Lyr.rmsnorm(shard_act(h), emb["final_norm"], self.cfg.rms_eps)
+        w = emb.get("unemb")
+        if w is None:
+            w = emb["emb"].T
+        logits = jnp.einsum("...d,dv->...v", h, w.astype(h.dtype))
+        return shard_act(logits, vocab_axis=True)
+
+    def _encode(self, params, src_embeds):
+        """Run the encoder stack (encdec family) over frame embeddings."""
+        cfg = self.cfg
+        B, S, _ = src_embeds.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = dict(positions=pos, causal=False)
+        seg = Segment("enc", "encoder", cfg.encoder_layers)
+        x = src_embeds.astype(cfg.dtype)
+        x = self._run_segment(seg, params["enc"], x, ctx, None)[0]
+        return Lyr.rmsnorm(x, params["enc_norm"], cfg.rms_eps)
+
+    def _run_segment(self, seg: Segment, p, x, ctx, cache):
+        """lax.scan over the segment's stacked layers."""
+        cfg = self.cfg
+        from repro.parallel import context as pctx
+        remat = pctx.get().remat
+
+        from repro.parallel.context import shard_act
+
+        def step(h, xs):
+            ps, cs = xs
+            # barrier the per-layer slices: stops XLA from hoisting dtype
+            # converts of sliced operands out of the loop, which would
+            # materialize f32 copies of entire (L, ...) weight/cache stacks
+            ps = jax.lax.optimization_barrier(ps)
+            if cs is not None:
+                cs = jax.lax.optimization_barrier(cs)
+            h, nc, st = _apply_kind(seg, ps, h, cfg, ctx, cs)
+            return shard_act(h), (nc, st)
+
+        if remat == "full":
+            step = jax.checkpoint(step)
+        elif remat == "dots":
+            step = jax.checkpoint(
+                step, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        if cache is None:
+            xs = (p, None)
+        else:
+            xs = (p, cache)
+        x, (new_cache, stats) = jax.lax.scan(step, x, xs)
+        return x, new_cache, stats
+
+    # -- phases --------------------------------------------------------------
+    def _backbone(self, params, tokens, ctx, cache, extras):
+        """Embed + all segments. Returns (h, new_cache_by_segment, stats)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if cfg.family == "encdec":
+            mem = (extras["memory"] if "memory" in extras
+                   else self._encode(params, extras["src_embeds"]))
+            mp = jnp.broadcast_to(
+                jnp.arange(mem.shape[1], dtype=jnp.int32), mem.shape[:2])
+            ctx = dict(ctx, memory=mem, mem_positions=mp)
+        if cfg.family == "vlm":
+            mem = extras["patch_embeds"].astype(cfg.dtype)
+            mp = jnp.broadcast_to(
+                jnp.arange(mem.shape[1], dtype=jnp.int32), mem.shape[:2])
+            ctx = dict(ctx, memory=mem, mem_positions=mp)
+        new_caches = {}
+        all_stats = {}
+        for seg in self.segments:
+            c = cache.get(seg.name) if cache else None
+            x, nc, st = self._run_segment(seg, params[seg.name], x, ctx, c)
+            if nc is not None:
+                new_caches[seg.name] = nc
+            if st:
+                all_stats[seg.name] = st
+        return x, new_caches, all_stats, ctx
+
+    def loss(self, params, batch, rng=None):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = dict(positions=pos, causal=True)
+        h, _, stats, ctx = self._backbone(params, tokens, ctx, None, batch)
+        logits = self._unembed(params, h)
+        valid = labels >= 0
+        lab = jnp.where(valid, labels, 0)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 lab[..., None], axis=-1)[..., 0]
+        ce = jnp.where(valid, lse - ll, 0.0)
+        ntok = jnp.maximum(valid.sum(), 1)
+        loss = ce.sum() / ntok
+        metrics = {"ce": loss, "ntokens": ntok}
+        # MoE diagnostics
+        aux = 0.0
+        for segname, st in stats.items():
+            if "aux_loss" in st:
+                aux = aux + jnp.mean(st["aux_loss"])
+                metrics[f"{segname}/drop_frac"] = jnp.mean(st["drop"])
+                metrics[f"{segname}/load_layers"] = st["load"]   # (n, E)
+        metrics["aux_loss"] = aux
+        if cfg.mtp:
+            mtp_l = mtp_mod.mtp_losses(
+                params["mtp"], h, tokens,
+                emb_fn=lambda t: self._embed(params, t),
+                unemb_fn=lambda hh: self._unembed(params, hh),
+                cfg=cfg, positions=pos,
+                block_apply=lambda p, x, positions: tfm.block_apply(
+                    p, x, cfg, dict(ctx, positions=positions), None)[0])
+            metrics["mtp_loss"] = mtp_l
+            loss = loss + mtp_l
+        return loss, metrics
+
+    def prefill(self, params, batch, extra_slots: int = 0):
+        """Process the prompt; returns (last-position logits, decode cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = dict(positions=pos, causal=True, collect_cache=True)
+        h, entries, _, ctx = self._backbone(params, tokens, ctx, None, batch)
+        logits = self._unembed(params, h[:, -1:])
+        cache = self._assemble_cache(entries, B, S, extra_slots, ctx, batch)
+        if cfg.mtp:
+            cache["mtp_h"] = h[:, -1:]
+        return logits, cache
+
+    def _assemble_cache(self, entries, B, S, extra, ctx, batch):
+        """Turn per-layer prefill entries into decode cache buffers."""
+        cfg = self.cfg
+        T = S + extra
+        cache: Dict[str, Any] = {}
+        for seg in self.segments:
+            if seg.name not in entries:
+                continue
+            e = entries[seg.name]
+            cache[seg.name] = self._entries_to_cache(seg, e, B, S, T)
+        if cfg.family in ("encdec", "vlm"):
+            cache["memory"] = ctx["memory"]
+        return cache
+
+    def _entries_to_cache(self, seg: Segment, e, B, S, T):
+        cfg = self.cfg
+
+        if seg.kind in ("dense", "moe", "decoder", "encoder"):
+            Tc = min(T, seg.window) if seg.window else T
+            keep = min(S, Tc)
+
+            cdt = jnp.dtype(cfg.cache_dtype_())
+
+            def prep(x):
+                """(n,B,S,...) entries -> (n,B,Tc,...): keep the last
+                ``keep`` tokens; ring layout slot = position %% Tc."""
+                x = x[:, :, S - keep:].astype(cdt)
+                padw = [(0, 0)] * x.ndim
+                padw[2] = (0, Tc - keep)
+                x = jnp.pad(x, padw)
+                if S > Tc:
+                    x = jnp.roll(x, S % Tc, axis=2)
+                return x
+
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                   (seg.n, B, S))[:, :, S - keep:]
+            pos = jnp.pad(pos, [(0, 0), (0, 0), (0, Tc - keep)],
+                          constant_values=-1)
+            if S > Tc:
+                # ring layout: token at position p sits at slot p %% Tc
+                roll = S % Tc
+                pos = jnp.roll(pos, roll, axis=2)
+            if cfg.attention == "mla":
+                ckv, kr = e
+                return dict(ckv=prep(ckv), kr=prep(kr), pos=pos)
+            k, v = e
+            return dict(k=prep(k), v=prep(v), pos=pos)
+        if seg.kind == "dense_moe":
+            return {"dense": self._entries_to_cache(
+                        Segment(seg.name, "dense", seg.n), e["dense"], B, S, T),
+                    "moe": self._entries_to_cache(
+                        Segment(seg.name, "dense", seg.n), e["moe"], B, S, T)}
+        if seg.kind == "vision_pattern":
+            return {"selfs": self._vision_cache(e["selfs"], B, S, T)}
+        if seg.kind == "ssd":
+            conv, state = e
+            return dict(conv=conv, state=state)
+        if seg.kind in ("rg3", "rg_tail"):
+            out = {}
+            for key, ee in e.items():
+                if key.startswith("r"):
+                    conv, hlast = ee
+                    out[key] = dict(conv=conv, h=hlast)
+                else:
+                    sub = Segment(seg.name, "dense", seg.n, window=seg.window)
+                    out[key] = self._entries_to_cache(sub, ee, B, S, T)
+            return out
+        raise ValueError(seg.kind)
+
+    def _vision_cache(self, sub, B, S, T):
+        k, v = sub
+        # (n, k, B, S, KV, hd) -> buffers (n, k, B, T, KV, hd)
+        def pad(x):
+            return jnp.pad(x, [(0, 0), (0, 0), (0, 0), (0, T - x.shape[3]),
+                               (0, 0), (0, 0)])
+        n, kk = k.shape[0], k.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (n, kk, B, S))
+        pos = jnp.pad(pos, [(0, 0), (0, 0), (0, 0), (0, T - S)],
+                      constant_values=-1)
+        return dict(k=pad(k), v=pad(v), pos=pos)
+
+    def decode_step(self, params, cache, tokens, positions):
+        """One decode step. tokens: (B,1) int32; positions: (B,1) int32."""
+        cfg = self.cfg
+        ctx = dict(positions=positions, causal=True)
+        extras = {"memory": cache["memory"]} if "memory" in cache else {}
+        if cfg.family == "vlm":
+            extras = {"patch_embeds": cache["memory"]}
+        h, new_caches, _, ctx = self._backbone(params, tokens, ctx, cache,
+                                               extras)
+        logits = self._unembed(params, h)
+        out_cache = dict(cache)
+        out_cache.update(new_caches)
+        if cfg.mtp:
+            out_cache["mtp_h"] = h
+        return logits, out_cache
+
+    # -- cache/init specs ----------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cache: Dict[str, Any] = {}
+        for seg in self.segments:
+            cache[seg.name] = _kind_cache(self.cfg, seg, batch, max_len)
+        cfg = self.cfg
+        if cfg.family in ("encdec", "vlm"):
+            n = (int(max_len * cfg.src_len_ratio) if cfg.family == "encdec"
+                 else cfg.num_patches)
+            cache["memory"] = jnp.zeros((batch, n, cfg.d_model), cfg.dtype)
+        if cfg.mtp:
+            cache["mtp_h"] = jnp.zeros((batch, 1, cfg.d_model), cfg.dtype)
+        return cache
+
+    def cache_structs(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    # -- dry-run inputs --------------------------------------------------------
+    def input_specs(self, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.phase in ("train", "prefill"):
+            d: Dict[str, Any] = {"tokens": sds((B, S), i32)}
+            if shape.phase == "train":
+                d["labels"] = sds((B, S), i32)
+            if cfg.family == "encdec":
+                d["src_embeds"] = sds((B, int(S * cfg.src_len_ratio),
+                                       cfg.d_model), jnp.dtype(cfg.dtype))
+            if cfg.family == "vlm":
+                d["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+            return d
+        # decode: tokens + positions + cache with S context slots
+        cache = self.cache_structs(B, S)
+        return {"tokens": sds((B, 1), i32), "positions": sds((B, 1), i32),
+                "cache": cache}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Param counting (DESIGN.md convention; used for MODEL_FLOPS = 6·N·D)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    m = Model(cfg)
+    specs = m.specs()
+    leaves = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0
+    for path, s in leaves:
+        sz = math.prod(s.shape)
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if active_only and "experts" in s.axes:
+            sz = int(sz * cfg.moe.top_k / cfg.moe.num_experts)
+        total += sz
+    return total

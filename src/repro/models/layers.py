@@ -1,0 +1,256 @@
+"""Shared layer zoo: norms, RoPE, dense linears (optionally on the FP8
+path), GQA / local / cross attention with decode caches, SwiGLU MLP.
+
+All layers are functional: ``*_specs(cfg)`` returns a ParamSpec pytree,
+``apply`` style functions take the materialized params.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Basics
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def linear(x: jax.Array, w: jax.Array, cfg: Optional[ModelConfig] = None,
+           b: Optional[jax.Array] = None) -> jax.Array:
+    """Dense GEMM; routes through the FP8 fine-grained-scaled path (paper
+    T4) when the config enables it."""
+    if cfg is not None and cfg.fp8 and w.ndim == 2 and x.shape[-1] >= 256:
+        from repro.core import fp8
+        y = fp8.fp8_linear(x, w, impl=cfg.fp8_impl)
+    else:
+        y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                              # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (also MHA/MQA; optional sliding window; optional qk-norm)
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ModelConfig, layers: int) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_()
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    pd = cfg.param_dtype
+    L = (layers,)
+    la = ("layers",)
+    specs = {
+        "wq": ParamSpec(L + (d, nh * hd), pd, la + ("embed", "heads"), "fan_in"),
+        "wk": ParamSpec(L + (d, nkv * hd), pd, la + ("embed", "kv_heads"), "fan_in"),
+        "wv": ParamSpec(L + (d, nkv * hd), pd, la + ("embed", "kv_heads"), "fan_in"),
+        "wo": ParamSpec(L + (nh * hd, d), pd, la + ("heads", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec(L + (nh * hd,), pd, la + ("heads",), "zeros")
+        specs["bk"] = ParamSpec(L + (nkv * hd,), pd, la + ("kv_heads",), "zeros")
+        specs["bv"] = ParamSpec(L + (nkv * hd,), pd, la + ("kv_heads",), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec(L + (hd,), pd, la + (None,), "ones")
+        specs["k_norm"] = ParamSpec(L + (hd,), pd, la + (None,), "ones")
+    return specs
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, x.shape[-1] // n))
+
+
+def _attn_direct(q, k, v, *, causal: bool, q_pos, k_pos, window: int = 0,
+                 scale: float):
+    """Unchunked attention. q: (B,S,H,hd) k/v: (B,T,KV,hd'). Mask: attend
+    iff k_pos <= q_pos (causal), q_pos - k_pos < window (if window>0), and
+    k_pos >= 0 (padding slots in decode caches carry k_pos = -1)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    # operands stay in model dtype; accumulate fp32 (MXU-style) — avoids
+    # materializing fp32 copies of the K/V cache (XLA would hoist the
+    # upcast across the layer scan, inflating memory L-fold)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = k_pos[:, None, :] >= 0                         # (B,S?,T) valid
+    if causal:
+        mask = mask & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    hv = v.shape[-1]
+    return out.reshape(B, S, H, hv).astype(v.dtype)
+
+
+# q-block size for the chunked (memory-roofline-friendly) path; blocks are
+# remat'd so backward recomputes scores instead of storing S x T.
+ATTN_BLOCK_Q = 512
+
+
+def attention_scores(q, k, v, *, causal: bool, q_pos, k_pos,
+                     window: int = 0, scale: float = 0.0,
+                     block_q: int = 0):
+    """Chunked attention: scan over query blocks; each block's S_b x T
+    score tile lives only transiently (and is recomputed in backward via
+    jax.checkpoint). This bounds attention memory to O(B*H*block_q*T) per
+    device instead of O(B*H*S*T) — required for the 32k prefill cells and
+    a first-class memory-roofline lever (EXPERIMENTS.md §Perf)."""
+    B, S, H, hd = q.shape
+    scale = scale or 1.0 / math.sqrt(hd)
+    bq = block_q or ATTN_BLOCK_Q
+    if S <= bq or S % bq != 0:
+        return _attn_direct(q, k, v, causal=causal, q_pos=q_pos,
+                            k_pos=k_pos, window=window, scale=scale)
+    nb = S // bq
+    qb = jnp.moveaxis(q.reshape(B, nb, bq, H, hd), 1, 0)
+    pb = jnp.moveaxis(q_pos.reshape(B, nb, bq), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qi, pi = inp
+        out = _attn_direct(qi, k, v, causal=causal, q_pos=pi, k_pos=k_pos,
+                           window=window, scale=scale)
+        # pin the (small) block output head-sharded so GSPMD reshards HERE
+        # rather than redistributing the (huge) fp32 score tiles
+        from repro.parallel.context import shard_heads
+        return None, shard_heads(out)
+
+    _, ob = jax.lax.scan(body, None, (qb, pb))
+    return jnp.moveaxis(ob, 0, 1).reshape(B, S, H, v.shape[-1])
+
+
+def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
+                  positions: jax.Array, causal: bool = True,
+                  window: int = 0,
+                  cache: Optional[dict] = None,
+                  kv_x: Optional[jax.Array] = None,
+                  kv_positions: Optional[jax.Array] = None):
+    """GQA self/cross attention. If ``cache`` is given, appends this step's
+    K/V at slot ``positions`` and attends over the cache (decode). If
+    ``kv_x`` is given, cross-attention over that memory (no cache logic).
+    Returns (out, new_cache).
+    """
+    hd = cfg.head_dim_()
+    src = x if kv_x is None else kv_x
+    q = linear(x, p["wq"], cfg, p.get("bq"))
+    k = linear(src, p["wk"], cfg, p.get("bk"))
+    v = linear(src, p["wv"], cfg, p.get("bv"))
+    q = _split_heads(q, cfg.num_heads)
+    k = _split_heads(k, cfg.num_kv_heads)
+    v = _split_heads(v, cfg.num_kv_heads)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    if kv_x is None:  # self-attention -> RoPE
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       cfg.rope_theta)
+        k_pos = positions if kv_positions is None else kv_positions
+    else:
+        k_pos = kv_positions
+        causal = False
+    if cache is None and q.shape[1] > 1:      # train/prefill layout pin
+        from repro.parallel.context import shard_heads
+        q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write k,v (B,1,KV,hd) at ring slot position %% T per batch
+        T = cache["k"].shape[1]
+        B = x.shape[0]
+        idx = (positions[:, 0] % T).astype(jnp.int32)     # (B,)
+        ba = jnp.arange(B)
+        upd = lambda buf, val: buf.at[ba, idx].set(val[:, 0].astype(buf.dtype))
+        ck = upd(cache["k"], k)
+        cv = upd(cache["v"], v)
+        cpos = cache["pos"].at[ba, idx].set(positions[:, 0])
+        new_cache = dict(k=ck, v=cv, pos=cpos)
+        kc = ck.astype(cfg.dtype) if ck.dtype != jnp.dtype(cfg.dtype) else ck
+        vc = cv.astype(cfg.dtype) if cv.dtype != jnp.dtype(cfg.dtype) else cv
+        out = attention_scores(q, kc, vc, causal=causal,
+                               q_pos=positions, k_pos=cpos, window=window)
+    else:
+        out = attention_scores(q, k, v, causal=causal,
+                               q_pos=positions, k_pos=k_pos, window=window)
+    out = out.reshape(out.shape[:-2] + (cfg.num_heads * hd,))
+    return linear(out, p["wo"], cfg), new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, layers: int, batch: int, max_len: int,
+                   window: int = 0) -> dict:
+    """Ring-buffer KV cache. For windowed attention the buffer is only
+    ``window`` slots (RecurrentGemma-style bounded cache)."""
+    T = min(max_len, window) if window else max_len
+    hd = cfg.head_dim_()
+    dt = jnp.dtype(cfg.cache_dtype_())
+    return dict(
+        k=jnp.zeros((layers, batch, T, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((layers, batch, T, cfg.num_kv_heads, hd), dt),
+        pos=-jnp.ones((layers, batch, T), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, layers: int, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.param_dtype
+    L, la = (layers,), ("layers",)
+    return {
+        "w_gate": ParamSpec(L + (d, f), pd, la + ("embed", "mlp"), "fan_in"),
+        "w_up": ParamSpec(L + (d, f), pd, la + ("embed", "mlp"), "fan_in"),
+        "w_down": ParamSpec(L + (f, d), pd, la + ("mlp", "embed"), "fan_in"),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    g = act_fn(cfg.act)(linear(x, p["w_gate"], cfg))
+    u = linear(x, p["w_up"], cfg)
+    return linear(g * u, p["w_down"], cfg)

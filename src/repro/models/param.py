@@ -1,0 +1,93 @@
+"""Parameter-spec system.
+
+Every model describes its parameters as a pytree of ``ParamSpec`` (shape,
+dtype, logical axes, initializer). From that single source of truth we
+derive:
+
+* ``init_params``     — materialized arrays (tests/examples, CPU-scale)
+* ``param_structs``   — ``ShapeDtypeStruct`` pytree (dry-run: no allocation)
+* ``param_shardings`` — ``NamedSharding`` via logical-axis rules
+  (see ``repro.parallel.sharding``)
+
+Logical axes used across the zoo:
+  "layers"   — stacked scan axis (never sharded on data/model)
+  "embed"    — d_model-like axes (replicated)
+  "heads"    — attention head axis (TP)
+  "kv_heads" — kv head axis (TP when divisible, else replicated)
+  "mlp"      — FFN hidden axis (TP)
+  "vocab"    — vocabulary axis (TP)
+  "experts"  — MoE expert axis (EP)
+  None       — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | scaled(<fan_in style>)
+    scale: float = 1.0       # stddev multiplier for normal inits
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "normal":
+            std = 0.02 * self.scale
+        elif self.init == "fan_in":
+            # fan-in = product of all dims except the last output dim
+            fan = max(1, math.prod(self.shape[:-1]) // (
+                self.shape[0] if self.axes and self.axes[0] == "layers" and len(self.shape) > 1 else 1))
+            std = self.scale / math.sqrt(fan)
+        else:
+            raise ValueError(self.init)
+        x = jax.random.normal(key, self.shape, jnp.float32) * std
+        return x.astype(self.dtype)
+
+
+def nbytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_structs(spec_tree):
+    return jax.tree.map(lambda s: s.struct(), spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialize every ParamSpec with a per-leaf folded key."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_axes(spec_tree):
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda s: s.axes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

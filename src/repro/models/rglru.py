@@ -1,0 +1,118 @@
+"""RecurrentGemma blocks: RG-LRU recurrent mixer + local (sliding-window)
+attention, in a 2:1 pattern. [arXiv:2402.19427]
+
+The paper cites this family (via its §2.1.3 discussion of linear-time
+alternatives); the RG-LRU recurrence is
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(lam)  (per-channel decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed with an associative scan (train/prefill) or a single-step update
+(decode). Decode state = (conv tail, h) — O(1) in sequence length, which is
+why long_500k runs for this arch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as Lyr
+from repro.models.param import ParamSpec
+from repro.models.ssm import _causal_conv
+
+C_EXP = 8.0
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def recurrent_block_specs(cfg: ModelConfig, prefix: Tuple[int, ...]) -> dict:
+    d, pd = cfg.d_model, cfg.param_dtype
+    w = _lru_width(cfg)
+    n = prefix[-1]
+    L, la = (n,), ("layers",)
+    specs = {
+        "ln1": ParamSpec(L + (d,), pd, la + (None,), "ones"),
+        "w_x": ParamSpec(L + (d, w), pd, la + ("embed", "mlp"), "fan_in"),
+        "w_y": ParamSpec(L + (d, w), pd, la + ("embed", "mlp"), "fan_in"),
+        "conv_w": ParamSpec(L + (cfg.rglru.conv_width, w), pd,
+                            la + (None, "mlp"), "normal", 0.5),
+        "conv_b": ParamSpec(L + (w,), pd, la + ("mlp",), "zeros"),
+        "wa": ParamSpec(L + (w, w), "float32", la + ("mlp", None), "fan_in"),
+        "ba": ParamSpec(L + (w,), "float32", la + (None,), "zeros"),
+        "wi": ParamSpec(L + (w, w), "float32", la + ("mlp", None), "fan_in"),
+        "bi": ParamSpec(L + (w,), "float32", la + (None,), "zeros"),
+        "lam": ParamSpec(L + (w,), "float32", la + (None,), "normal", 50.0),
+        "w_out": ParamSpec(L + (w, d), pd, la + ("mlp", "embed"), "fan_in"),
+        "ln2": ParamSpec(L + (d,), pd, la + (None,), "ones"),
+        "mlp": Lyr.mlp_specs(cfg, n),
+    }
+    from repro.models.transformer import _prefixed
+    return _prefixed(specs, prefix)
+
+
+def _rg_lru(x: jax.Array, p: dict, h0: Optional[jax.Array]):
+    """x: (B,S,w) fp32. Returns (y, h_last)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["wa"]) + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["wi"]) + p["bi"])
+    log_a = -C_EXP * jax.nn.softplus(p["lam"]) * r      # log(a^(c r)), a=sig(lam)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    # associative scan over time: h_t = a_t h_{t-1} + b_t
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    h = bb if h0 is None else bb + aa * h0[:, None]
+    return h, h[:, -1]
+
+
+def recurrent_block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
+                          cache=None):
+    """cache (decode): dict(conv (B,K-1,w), h (B,w))."""
+    res = x
+    h = Lyr.rmsnorm(x, p["ln1"], cfg.rms_eps)
+    branch_y = jax.nn.gelu(Lyr.linear(h, p["w_y"], cfg))
+    bx = Lyr.linear(h, p["w_x"], cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    bx, new_conv = _causal_conv(bx, p["conv_w"], p["conv_b"], conv_state)
+    bx32 = bx.astype(jnp.float32)
+
+    if cache is not None:
+        # single step
+        r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", bx32, p["wa"]) + p["ba"])
+        i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", bx32, p["wi"]) + p["bi"])
+        a = jnp.exp(-C_EXP * jax.nn.softplus(p["lam"]) * r)
+        hprev = cache["h"].astype(jnp.float32)
+        hn = a[:, 0] * hprev + (jnp.sqrt(jnp.maximum(1 - a * a, 1e-12))
+                                * (i * bx32))[:, 0]
+        y = hn[:, None]
+        new_cache = dict(conv=new_conv.astype(cache["conv"].dtype),
+                         h=hn.astype(cache["h"].dtype))
+    else:
+        y, h_last = _rg_lru(bx32, p, None)
+        new_cache = ((new_conv, h_last) if ctx.get("collect_cache") else None)
+
+    y = (y.astype(x.dtype) * branch_y)
+    x = res + Lyr.linear(y, p["w_out"], cfg)
+    f = Lyr.mlp(p["mlp"], Lyr.rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
+    return x + f, new_cache, {}
+
+
+def init_rglru_cache(cfg: ModelConfig, layers: int, batch: int) -> dict:
+    w = _lru_width(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return dict(
+        conv=jnp.zeros((layers, batch, cfg.rglru.conv_width - 1, w), dt),
+        h=jnp.zeros((layers, batch, w), jnp.float32),
+    )

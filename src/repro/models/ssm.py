@@ -1,0 +1,184 @@
+"""Mamba-2 SSD (state-space duality) blocks. [arXiv:2405.21060]
+
+The paper (§2.1.3) points at Mamba-2 as the linear-time direction for the
+KV-cache problem; this module implements the SSD mixer:
+
+* train/prefill: chunked SSD — within-chunk quadratic (attention-like)
+  matmuls + inter-chunk linear state recurrence (O(N) in sequence).
+* decode: O(1)-per-token recurrent state update. The recurrent state
+  (nheads, head_dim, d_state) is the whole "cache" — reported next to MLA's
+  latent in the Table 1 benchmark.
+
+Layout follows the reference Mamba-2: in_proj -> [z, x, B, C, dt],
+depthwise conv on (x,B,C), SSD, gated RMSNorm, out_proj. n_groups = 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear, rmsnorm
+from repro.models.param import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    return s, d_in, H
+
+
+def ssd_block_specs(cfg: ModelConfig, prefix: Tuple[int, ...]) -> dict:
+    s, d_in, H = _dims(cfg)
+    d, pd = cfg.d_model, cfg.param_dtype
+    N = s.d_state
+    n = prefix[-1]
+    L = (n,)
+    la = ("layers",)
+    conv_ch = d_in + 2 * N                     # x, B, C go through the conv
+    specs = {
+        "ln": ParamSpec(L + (d,), pd, la + (None,), "ones"),
+        "w_in": ParamSpec(L + (d, 2 * d_in + 2 * N + H), pd,
+                          la + ("embed", "mlp"), "fan_in"),
+        "conv_w": ParamSpec(L + (s.d_conv, conv_ch), pd, la + (None, "mlp"),
+                            "normal", 0.5),
+        "conv_b": ParamSpec(L + (conv_ch,), pd, la + ("mlp",), "zeros"),
+        "a_log": ParamSpec(L + (H,), "float32", la + ("heads",), "zeros"),
+        "dt_bias": ParamSpec(L + (H,), "float32", la + ("heads",), "zeros"),
+        "D": ParamSpec(L + (H,), "float32", la + ("heads",), "ones"),
+        "norm": ParamSpec(L + (d_in,), pd, la + ("mlp",), "ones"),
+        "w_out": ParamSpec(L + (d_in, d), pd, la + ("mlp", "embed"), "fan_in"),
+    }
+    from repro.models.transformer import _prefixed
+    return _prefixed(specs, prefix)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_in, H = _dims(cfg)
+    N = s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width K. xbc: (B,S,C). state: (B,K-1,C) tail of
+    previous tokens (decode). Returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (K - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    out = jax.nn.silu(out + b)
+    new_state = full[:, -(K - 1):]
+    return out, new_state
+
+
+def _ssd_scan(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) <0;
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Standard SSD decomposition: within-chunk 'attention' term + inter-chunk
+    recurrent term, both exact.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    la = dtc * A                                        # log decay per step
+    cum = jnp.cumsum(la, axis=2)                        # (B,nc,Q,H)
+    # within-chunk: y_intra[t] = sum_{s<=t} C_t·B_s dt_s exp(cum_t - cum_s) x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)          # (B,nc,Q,Q)
+    w_ts = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w_ts, xc)
+
+    # chunk summary: state contribution of each chunk
+    rem = cum[:, :, -1:, :] - cum                       # decay from s to end
+    contrib = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                         dtc * jnp.exp(rem), Bc, xc)    # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    # inter-chunk recurrence over nc (sequential scan; nc is small)
+    def step(S_prev, inp):
+        dec, con = inp                                  # (B,H), (B,H,P,N)
+        S_new = S_prev * dec[..., None, None] + con
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+    scan_dec = jnp.moveaxis(chunk_decay, 1, 0)          # (nc,B,H)
+    scan_con = jnp.moveaxis(contrib, 1, 0)              # (nc,B,H,P,N)
+    S_final, S_starts = jax.lax.scan(step, S0, (scan_dec, scan_con))
+    S_starts = jnp.moveaxis(S_starts, 0, 1)             # (B,nc,H,P,N)
+
+    # inter-chunk output: y_inter[t] = C_t · (exp(cum_t) * S_chunk_start)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp",
+                         Cc, jnp.exp(cum), S_starts)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, S_final
+
+
+def ssd_block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
+                    cache=None):
+    """Full SSD block. cache (decode): dict(conv (B,K-1,C), state (B,H,P,N))."""
+    s, d_in, H = _dims(cfg)
+    N, P = s.d_state, s.head_dim
+    res = x
+    h = rmsnorm(x, p["ln"], cfg.rms_eps)
+    z, xbc, dt = _split_proj(cfg, linear(h, p["w_in"], cfg))
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    B_, S_ = x.shape[0], x.shape[1]
+    xh = xs.reshape(B_, S_, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,) negative
+
+    if cache is not None:
+        # single-token recurrent update (S_==1)
+        dt1 = dt[:, 0]                                  # (B,H)
+        a = jnp.exp(dt1 * A)                            # (B,H)
+        st = cache["state"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        st = st * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), st)
+        y = y[:, None]                                  # (B,1,H,P)
+        new_cache = dict(conv=new_conv.astype(cache["conv"].dtype),
+                         state=st.astype(cache["state"].dtype))
+    else:
+        chunk = min(s.chunk, S_)
+        y, Sf = _ssd_scan(xh, dt, A, Bm, Cm, chunk)
+        new_cache = (new_conv, Sf) if ctx.get("collect_cache") else None
+
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S_, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = linear(y, p["w_out"], cfg)
+    return res + out, new_cache, {}
+
+
+def init_ssd_cache(cfg: ModelConfig, layers: int, batch: int) -> dict:
+    s, d_in, H = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    conv_ch = d_in + 2 * s.d_state
+    return dict(
+        conv=jnp.zeros((layers, batch, s.d_conv - 1, conv_ch), dt),
+        state=jnp.zeros((layers, batch, H, s.head_dim, s.d_state), jnp.float32),
+    )

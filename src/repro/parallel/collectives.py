@@ -1,0 +1,98 @@
+"""Compressed collectives (paper §3.2 LogFMT + §6.5 in-network compression).
+
+``compressed_psum`` — ring reduce-scatter + all-gather over a mesh axis
+with LogFMT-compressed hops. Intended for the *scarce* fabric (the inter-
+pod axis in our meshes; the paper's IB): gradients cross the slow links at
+~n_bits/16 of their bf16 size. Quantization error accumulates once per
+reduce hop; ``logfmt_bench`` quantifies it and tests bound it.
+
+Also provides plain helpers the trainer uses (grad sync, cross-replica
+checksum for SDC detection — paper §6.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import logfmt
+
+
+def _ring_perm(n: int, shift: int = 1):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def compressed_psum(x: jax.Array, axis: str, n_bits: int = 8) -> jax.Array:
+    """Sum ``x`` across ``axis`` with LogFMT-compressed ring hops.
+
+    Must run inside shard_map with ``axis`` in scope. x: any (..., d) with
+    d padded to the LogFMT tile internally. Returns the summed array
+    (same on every member, like psum).
+    """
+    n = jax.lax.axis_size(axis)
+    if n == 1:
+        return x
+    shape = x.shape
+    d = shape[-1]
+    pad = (-d) % logfmt.TILE
+    xf = x.astype(jnp.float32).reshape(-1, d)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0), (0, pad)])
+    rows = xf.shape[0]
+    # split rows into n chunks (pad rows)
+    rpad = (-rows) % n
+    if rpad:
+        xf = jnp.pad(xf, [(0, rpad), (0, 0)])
+    chunks = xf.reshape(n, -1, xf.shape[-1])
+
+    me = jax.lax.axis_index(axis)
+
+    def send(c):
+        """One compressed ring hop i -> i+1."""
+        codes, mn, step = logfmt.encode(c, n_bits)
+        codes = jax.lax.ppermute(codes, axis, _ring_perm(n))
+        mn = jax.lax.ppermute(mn, axis, _ring_perm(n))
+        step = jax.lax.ppermute(step, axis, _ring_perm(n))
+        return logfmt.decode(codes, mn, step, n_bits, dtype=jnp.float32)
+
+    # --- reduce-scatter: at hop t device i forwards its running chunk and
+    # accumulates chunk (i - t - 1); after n-1 hops it owns chunk (i+1) ----
+    acc = jnp.take(chunks, me, axis=0)
+    for t in range(n - 1):
+        acc = send(acc) + jnp.take(chunks, (me - t - 1) % n, axis=0)
+    # --- all-gather: rotate the reduced chunks around (compressed) -------
+    out = jnp.zeros_like(chunks)
+    out = out.at[(me + 1) % n].set(acc)
+    cur = acc
+    for t in range(1, n):
+        cur = send(cur)
+        out = out.at[(me + 1 - t) % n].set(cur)
+    y = out.reshape(-1, xf.shape[-1])
+    if rpad:
+        y = y[:rows]
+    if pad:
+        y = y[:, :d]
+    return y.reshape(shape).astype(x.dtype)
+
+
+def fletcher64(x: jax.Array) -> jax.Array:
+    """Cheap on-device checksum of a pytree leaf (SDC guard, paper §6.1).
+    DP replicas must agree bit-for-bit; divergence flags silent corruption.
+    (uint32 arithmetic — wrap-around is part of the hash.)"""
+    b = jax.lax.bitcast_convert_type(x.reshape(-1).astype(jnp.float32),
+                                     jnp.uint32)
+    i = jnp.arange(1, b.shape[0] + 1, dtype=jnp.uint32)
+    s1 = jnp.sum(b, dtype=jnp.uint32)
+    s2 = jnp.sum(b * i, dtype=jnp.uint32)
+    return s1 ^ (s2 << jnp.uint32(1))
+
+
+def tree_checksum(tree) -> jax.Array:
+    leaves = [fletcher64(l) for l in jax.tree.leaves(tree)
+              if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)]
+    out = jnp.uint32(0)
+    for l in leaves:
+        out = out ^ l
+    return out

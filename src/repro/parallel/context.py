@@ -1,0 +1,110 @@
+"""Parallel execution context.
+
+Models are written once and consult this context to decide how to execute
+(local vs shard_map EP MoE, remat policy). The launcher/dry-run sets it;
+tests default to local single-device execution.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)   # axes carrying the batch dim
+    ep_axis: Optional[str] = "model"       # axis carrying experts
+    tp_axis: Optional[str] = "model"       # axis for tensor parallelism
+    pod_axis: Optional[str] = None         # slow inter-pod axis (if any)
+    moe_impl: str = "local"                # local | ep_flat | ep_dedup
+    ep_ftp: bool = False                   # decode: expert-FF TP over data
+    wire: str = "fp8"                      # EP dispatch wire: fp8|bf16|fp32
+    remat: str = "none"                    # none | full | dots
+    seq_axis: Optional[str] = None         # sequence sharding for prefill
+    pin_attn: bool = True                  # pin q/k/v + block outputs to
+                                           # head sharding (kills GSPMD
+                                           # fp32 score redistribution)
+
+    @property
+    def ep_enabled(self) -> bool:
+        return self.mesh is not None and self.moe_impl != "local"
+
+
+_CURRENT = ParallelCtx()
+
+
+def get() -> ParallelCtx:
+    return _CURRENT
+
+
+def set_ctx(ctx: ParallelCtx) -> None:
+    global _CURRENT
+    _CURRENT = ctx
+
+
+@contextlib.contextmanager
+def use(ctx: ParallelCtx):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = ctx
+    try:
+        yield ctx
+    finally:
+        _CURRENT = prev
+
+
+def shard_act(x, vocab_axis: bool = False):
+    """Pin activation sharding: batch over dp axes (when divisible), last
+    dim over the model axis for vocab-sized tensors (logits). Models call
+    this on the residual stream so GSPMD never propagates weight-style
+    shardings onto activations (the classic FSDP pitfall)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ctx = get()
+    mesh = ctx.mesh
+    if mesh is None or x.ndim < 2:
+        return x
+    dp_total = 1
+    for a in ctx.dp_axes:
+        dp_total *= mesh.shape[a]
+    entries = [None] * x.ndim
+    if x.shape[0] % dp_total == 0 and x.shape[0] > 0:
+        entries[0] = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    # Megatron-style sequence parallelism: residual stream sharded along
+    # seq over the model axis between blocks (norms/MLP token-parallel;
+    # attention gathers) — divides the remat residual stack by |model|
+    if ctx.seq_axis and x.ndim >= 3 and x.shape[1] > 1 and \
+            x.shape[1] % mesh.shape[ctx.seq_axis] == 0 and not vocab_axis:
+        entries[1] = ctx.seq_axis
+    if vocab_axis and ctx.tp_axis and             x.shape[-1] % mesh.shape[ctx.tp_axis] == 0:
+        entries[-1] = ctx.tp_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def shard_heads(x):
+    """Pin (B, S, H, hd) attention tensors to batch x head sharding
+    (batch over dp, heads over the model axis, seq/hd unsharded). Applied
+    to q/k/v and attention outputs so GSPMD reshards ONCE per layer in the
+    model dtype instead of redistributing fp32 score tiles per q-block
+    (measured ~8x activation-collective churn otherwise)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ctx = get()
+    mesh = ctx.mesh
+    if mesh is None or x.ndim != 4 or not getattr(ctx, "pin_attn", True):
+        return x
+    dp_total = 1
+    for a in ctx.dp_axes:
+        dp_total *= mesh.shape[a]
+    entries = [None] * 4
+    if x.shape[0] % dp_total == 0 and x.shape[0] > 0:
+        entries[0] = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    if ctx.tp_axis and x.shape[2] % mesh.shape[ctx.tp_axis] == 0:
+        entries[2] = ctx.tp_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

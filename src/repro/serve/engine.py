@@ -1,0 +1,171 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+cache, greedy/temperature sampling, EOS/max-len handling.
+
+The decode step is the paper's §2.3.2 workload: one token per active slot
+against the cache (latent cache for MLA archs, ring KV for GQA, recurrent
+state for SSM/hybrid). Throughput model and EP interplay live in
+``network/perfmodel``; disaggregation in ``serve/disagg``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot batch engine (continuous batching-lite).
+
+    All slots share one cache pytree of capacity ``max_len``; prefill runs
+    per-request (batch 1) and writes into the slot; decode steps run the
+    whole batch. This mirrors production decode pods where batch occupancy
+    changes per step but shapes stay static (XLA-friendly).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, slots: int = 4,
+                 max_len: int = 128, seed: int = 0,
+                 use_mtp: bool = False):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        self.slots = slots
+        self.max_len = max_len
+        self.use_mtp = use_mtp and cfg.mtp is not None
+        self.cache = self.model.init_cache(slots, max_len)
+        self.positions = np.zeros((slots,), np.int64)   # next position
+        self.active: List[Optional[Request]] = [None] * slots
+        self._decode = jax.jit(self.model.decode_step)
+        self.stats = {"steps": 0, "tokens": 0, "accepted_drafts": 0,
+                      "drafts": 0}
+        self._drafts: List[Optional[int]] = [None] * slots
+
+    # -- admission ----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def add_request(self, req: Request, extras: Optional[Dict] = None):
+        slot = self.free_slots()[0]
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        batch = {"tokens": toks}
+        if extras:
+            batch.update(extras)
+        logits, cache1 = self.model.prefill(
+            self.params, batch, extra_slots=self.max_len - len(req.prompt))
+        first = int(jnp.argmax(logits[0, -1]))
+        req.out.append(first)
+        # splice the single-request cache into the batch cache at ``slot``
+        self.cache = _splice(self.cache, cache1, slot)
+        self.positions[slot] = len(req.prompt)
+        self.active[slot] = req
+        self.stats["tokens"] += 1
+        return first
+
+    # -- decode -------------------------------------------------------------
+    def step(self):
+        """One batched decode step over all active slots."""
+        if not any(r is not None for r in self.active):
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                toks[i, 0] = r.out[-1]
+                pos[i, 0] = self.positions[i]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        self.stats["steps"] += 1
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            # MTP speculative accounting: did last step's draft match?
+            if self.use_mtp and self._drafts[i] is not None:
+                self.stats["drafts"] += 1
+                if self._drafts[i] == tok:
+                    self.stats["accepted_drafts"] += 1
+            r.out.append(tok)
+            self.stats["tokens"] += 1
+            self.positions[i] += 1
+            if (r.eos is not None and tok == r.eos) or \
+                    len(r.out) >= r.max_new:
+                r.done = True
+                self.active[i] = None
+                self._drafts[i] = None
+        if self.use_mtp:
+            self._draft_next(jnp.asarray(nxt))
+
+    def _draft_next(self, last_tokens):
+        """MTP module drafts each slot's token-after-next (paper §2.3.3)."""
+        from repro.core import mtp as mtp_mod
+        from repro.models import transformer as tfm
+        cfg = self.cfg
+        h = self.cache["mtp_h"]                       # (B, 1, d)
+        emb = self.model._embed(self.params, last_tokens[:, None])
+        pos = jnp.asarray(self.positions, jnp.int32)[:, None]
+        logits = mtp_mod.mtp_draft(
+            self.params["mtp"], h, emb, cfg=cfg, positions=pos,
+            block_apply=lambda p, x, positions: tfm.block_apply(
+                p, x, cfg, dict(positions=positions, causal=True), None)[0],
+            unemb_fn=lambda hh: self.model._unembed(self.params, hh))
+        drafts = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, r in enumerate(self.active):
+            self._drafts[i] = int(drafts[i]) if r is not None else None
+
+    def run_until_done(self, max_steps: int = 1000):
+        for _ in range(max_steps):
+            if not any(r is not None for r in self.active):
+                break
+            self.step()
+
+    def acceptance_rate(self) -> float:
+        d = self.stats["drafts"]
+        return self.stats["accepted_drafts"] / d if d else 0.0
+
+
+def _splice(batch_cache, one_cache, slot: int):
+    """Write a batch-1 cache pytree into slot ``slot`` of the batch cache.
+    Handles leaves whose batch dim position differs by matching shapes."""
+    def f(big, small):
+        if big is None:
+            return None
+        if big.shape == small.shape:
+            # single-slot engine: the prefill cache IS the batch cache
+            return small.astype(big.dtype)
+        # find the batch axis: the axis where small has size 1 and big has
+        # size  == slots, scanning from axis 0
+        for ax in range(big.ndim):
+            if small.shape[ax] == 1 and big.shape[ax] != small.shape[ax]:
+                idx = [slice(None)] * big.ndim
+                idx[ax] = slice(slot, slot + 1)
+                pad = small
+                # pad small's cache-length axis up to big's if needed
+                for a2 in range(big.ndim):
+                    if a2 != ax and pad.shape[a2] != big.shape[a2]:
+                        widths = [(0, 0)] * big.ndim
+                        widths[a2] = (0, big.shape[a2] - pad.shape[a2])
+                        cval = -1 if jnp.issubdtype(pad.dtype, jnp.integer) \
+                            else 0
+                        pad = jnp.pad(pad, widths, constant_values=cval)
+                return big.at[tuple(idx)].set(pad.astype(big.dtype))
+        # no batch axis (e.g. per-layer slot counters): keep the larger
+        return big if big.shape == small.shape else big
+    return jax.tree.map(f, batch_cache, one_cache)

@@ -1,0 +1,20 @@
+"""LR schedules (warmup + cosine / constant-then-decay, V3-style)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def constant_with_warmup(step, *, peak_lr: float, warmup: int):
+    step = jnp.asarray(step, jnp.float32)
+    return peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)

@@ -1,0 +1,181 @@
+"""Training orchestration: jitted train step (grads -> AdamW -> router-bias
+balancing), checkpoint/restart, failure recovery, elastic re-meshing,
+straggler monitoring, SDC guard. The launcher (launch/train.py) and the
+fault-tolerance tests drive this class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import routing
+from repro.data.pipeline import SyntheticCorpus
+from repro.models.api import Model, build_model
+from repro.parallel import collectives
+from repro.parallel import context as pctx_mod
+from repro.train import checkpoint as ckpt
+from repro.train import fault as fault_mod
+from repro.train import optimizer as optim
+from repro.train import schedule as sched
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    bias_update_rate: float = 1e-3        # aux-loss-free balancing (V3)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    sdc_check_every: int = 0              # 0 = off
+    seed: int = 0
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    """Returns jit-able (params, opt_state, batch, step) -> (params,
+    opt_state, metrics). Router bias is updated out-of-band (not by Adam)
+    per DeepSeek-V3's aux-loss-free balancing."""
+
+    def step_fn(params, opt_state, batch, step):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = sched.warmup_cosine(step, peak_lr=tc.peak_lr, warmup=tc.warmup,
+                                 total=tc.total_steps)
+        params, opt_state, ostats = optim.update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=tc.weight_decay, clip_norm=tc.clip_norm)
+        # --- aux-loss-free router-bias balancing (paper T2/V3) ----------
+        cfg = model.cfg
+        if cfg.moe and cfg.moe.router_bias:
+            for seg in model.segments:
+                key = f"{seg.name}/load_layers"
+                if key in metrics and "moe" in params[seg.name]:
+                    load = metrics[key]                      # (n, E)
+                    bias = params[seg.name]["moe"]["bias"]
+                    new_bias = routing.update_bias(
+                        bias, load, tc.bias_update_rate)
+                    params[seg.name]["moe"]["bias"] = new_bias
+                    # keep master copy consistent
+                    opt_state = opt_state._replace(master=_set_in(
+                        opt_state.master, (seg.name, "moe", "bias"),
+                        new_bias.astype(jnp.float32)))
+        metrics = {k: v for k, v in metrics.items()
+                   if not k.endswith("load_layers")}
+        metrics.update(ostats)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step_fn
+
+
+def _set_in(tree, path, value):
+    if len(path) == 1:
+        out = dict(tree)
+        out[path[0]] = value
+        return out
+    out = dict(tree)
+    out[path[0]] = _set_in(tree[path[0]], path[1:], value)
+    return out
+
+
+class Trainer:
+    """Single-process trainer with restart/elastic-recovery semantics.
+
+    ``devices`` simulates the healthy device pool: on a NodeFailure the
+    pool shrinks and training resumes from the last checkpoint on a
+    smaller mesh (elastic re-shard happens in checkpoint.restore)."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 data: Optional[SyntheticCorpus] = None,
+                 injector: Optional[fault_mod.FailureInjector] = None,
+                 global_batch: int = 8, seq_len: int = 64):
+        self.cfg = cfg
+        self.tc = tc
+        self.model = build_model(cfg)
+        self.data = data or SyntheticCorpus(cfg.vocab_size, seq_len,
+                                            global_batch, seed=tc.seed)
+        self.injector = injector
+        self.sdc = fault_mod.SDCGuard()
+        self.straggler = fault_mod.StragglerMonitor(n_replicas=4)
+        self.restarts = 0
+        self.history: list = []
+        self._init_state()
+
+    def _init_state(self, restore: bool = False):
+        if restore and self.tc.ckpt_dir and ckpt.latest_step(self.tc.ckpt_dir):
+            like = {"params": self.model.init(jax.random.PRNGKey(self.tc.seed))}
+            like["opt"] = optim.init(like["params"])
+            state, extras = ckpt.restore(self.tc.ckpt_dir, like)
+            self.params = state["params"]
+            self.opt_state = state["opt"]
+            self.step = int(extras["step"])
+        else:
+            self.params = self.model.init(jax.random.PRNGKey(self.tc.seed))
+            self.opt_state = optim.init(self.params)
+            self.step = 0
+        self._jit_step = jax.jit(make_train_step(self.model, self.tc))
+
+    def _save(self):
+        if self.tc.ckpt_dir:
+            ckpt.save(self.tc.ckpt_dir, self.step,
+                      {"params": self.params, "opt": self.opt_state},
+                      extras={"step": self.step}, keep=self.tc.keep_ckpts)
+
+    def run(self, steps: int) -> Dict[str, Any]:
+        target = self.step + steps
+        while self.step < target:
+            try:
+                self._run_until(target)
+            except fault_mod.NodeFailure as e:
+                # failure: re-mesh on survivors + restore last checkpoint
+                self.restarts += 1
+                self._init_state(restore=True)
+        return {"final_step": self.step, "restarts": self.restarts,
+                "history": self.history,
+                "sdc_alarms": self.sdc.alarms,
+                "straggler_events": self.straggler.events}
+
+    def _run_until(self, target: int):
+        while self.step < target:
+            if self.injector:
+                self.injector.check(self.step)
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch_at(self.step).items()}
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch, jnp.asarray(self.step))
+            metrics = {k: (float(v) if getattr(v, "ndim", 1) == 0 else
+                           np.asarray(v))
+                       for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            # simulated per-replica timing (replica 0 = this process)
+            self.straggler.observe(self.step, [dt] * 4)
+            self.history.append({"step": self.step, **{
+                k: v for k, v in metrics.items() if np.ndim(v) == 0}})
+            self.step += 1
+            if self.tc.sdc_check_every and \
+                    self.step % self.tc.sdc_check_every == 0:
+                c = int(collectives.tree_checksum(self.params))
+                checks = [c, c]     # DP replicas (bit-identical here)
+                if self.injector and self.injector.corrupts(self.step):
+                    checks[1] ^= 0xDEAD
+                    self.injector.fired.add(self.step)
+                if not self.sdc.check(self.step, checks):
+                    self._init_state(restore=True)    # restore-on-SDC
+                    continue
+            if self.tc.ckpt_dir and self.step % self.tc.ckpt_every == 0:
+                self._save()

@@ -1,0 +1,114 @@
+"""FP8 fine-grained quantization: unit + property + kernel-vs-oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fp8
+
+
+class TestQuantization:
+    def test_tile_roundtrip_error_bound(self, rng):
+        x = jax.random.normal(rng, (16, 384), jnp.float32)
+        y = fp8.qdq_tile(x)
+        # E4M3 has 3 mantissa bits -> relative error <= 2^-4 per element
+        # within each tile (scale sets the exponent window)
+        rel = jnp.abs(x - y) / jnp.maximum(jnp.abs(x), 1e-12)
+        assert float(rel.max()) < 0.07
+
+    def test_block_roundtrip_error_bound(self, rng):
+        w = jax.random.normal(rng, (256, 384), jnp.float32)
+        y = fp8.qdq_block(w)
+        rel = jnp.abs(w - y) / jnp.maximum(jnp.abs(w).max(), 1e-12)
+        assert float(rel.max()) < 0.07
+
+    def test_tile_scale_shapes(self, rng):
+        x = jax.random.normal(rng, (4, 300))     # non-multiple of 128
+        q, s = fp8.quantize_tilewise(x)
+        assert q.shape == (4, 300) and q.dtype == fp8.E4M3
+        assert s.shape == (4, 3)                 # ceil(300/128)
+
+    def test_zero_preserved(self):
+        x = jnp.zeros((2, 128))
+        q, s = fp8.quantize_tilewise(x)
+        assert bool((fp8.dequant_tilewise(q, s) == 0).all())
+
+    @given(st.integers(1, 4), st.integers(1, 300), st.floats(0.01, 1e4))
+    @settings(max_examples=20, deadline=None)
+    def test_property_scale_invariance(self, rows, cols, scale):
+        """Quantization error is relative: scaling input ~scales output.
+        The tile scale itself rounds in fp32, so grid points can shift by
+        one quantization step on ties — bound the violating fraction and
+        the violation magnitude instead of exact equality."""
+        x = np.linspace(-1, 1, rows * cols, dtype=np.float32).reshape(
+            rows, cols)
+        y1 = np.asarray(fp8.qdq_tile(jnp.asarray(x))) * scale
+        y2 = np.asarray(fp8.qdq_tile(jnp.asarray(x * scale)))
+        # E4M3 has 3 mantissa bits: ULP(v) ~ v/8 at the top of each
+        # binade, so a 1-ULP grid shift near amax can move a value by
+        # ~scale/8 (amax(|x|) = 1 here)
+        qstep = scale / 8.0
+        bad = np.abs(y1 - y2) > (2e-2 * np.abs(y2) + 0.25 * qstep)
+        assert bad.mean() <= 0.05, bad.mean()
+        assert np.abs(y1 - y2).max() <= 1.5 * qstep
+
+    def test_linear_grads_close_to_exact(self, rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        x = jax.random.normal(k1, (32, 256))
+        w = jax.random.normal(k2, (256, 128)) * 0.05
+        ct = jax.random.normal(k3, (32, 128))
+
+        def f_fp8(x, w):
+            return (fp8.fp8_linear(x, w) * ct).sum()
+
+        def f_ref(x, w):
+            return ((x @ w) * ct).sum()
+
+        g8 = jax.grad(f_fp8, argnums=(0, 1))(x, w)
+        gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        for a, b in zip(g8, gr):
+            rel = jnp.abs(a - b) / jnp.maximum(jnp.abs(b).max(), 1e-9)
+            assert float(rel.max()) < 0.15   # fp8 bwd quantization noise
+
+
+class TestKernel:
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (256, 256, 128),
+                                       (384, 512, 256), (128, 384, 384)])
+    @pytest.mark.parametrize("dist", ["normal", "heavy"])
+    def test_kernel_matches_oracle(self, rng, shape, dist):
+        from repro.kernels.fp8_gemm.fp8_gemm import fp8_gemm
+        from repro.kernels.fp8_gemm.ref import fp8_gemm_ref
+        M, K, N = shape
+        k1, k2 = jax.random.split(rng)
+        x = jax.random.normal(k1, (M, K), jnp.float32)
+        w = jax.random.normal(k2, (K, N), jnp.float32)
+        if dist == "heavy":
+            x = x * jnp.exp(jax.random.normal(k2, (M, K)))
+        xq, xs = fp8.quantize_tilewise(x)
+        wq, ws = fp8.quantize_blockwise(w)
+        got = fp8_gemm(xq, xs, wq, ws, bm=128, bn=128)
+        ref = fp8_gemm_ref(xq, xs, wq, ws)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_wrapper_padding(self, rng):
+        from repro.kernels.fp8_gemm import ops
+        x = jax.random.normal(rng, (100, 200))
+        w = jax.random.normal(jax.random.PRNGKey(7), (200, 72))
+        y = ops.fp8_matmul(x, w, bm=128, bn=128)
+        yr = ops.fp8_matmul(x, w, use_ref=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_accuracy_vs_bf16_paper_claim(self, rng):
+        """Paper §2.4: FP8 relative loss vs BF16 below 0.25% on real
+        workloads; here: GEMM-level relative error small for activation-
+        scale inputs."""
+        from repro.kernels.fp8_gemm import ops
+        x = jax.random.normal(rng, (256, 512)) * 0.5
+        w = jax.random.normal(jax.random.PRNGKey(3), (512, 256)) * 0.02
+        exact = x @ w
+        y = ops.fp8_matmul(x, w, use_ref=True)
+        rel = jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact)
+        assert float(rel) < 0.05

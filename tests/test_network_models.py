@@ -1,0 +1,93 @@
+"""Network topology cost model (Table 3) + TPOT speed limits (§2.3.2) +
+schedule math (Table 4) — asserted against the paper's published numbers."""
+import pytest
+
+from repro.network.perfmodel import (alltoall_busbw, mfu, paper_gb200,
+                                     paper_h800_ib, tpu_v5e_ici)
+from repro.network.topology import PAPER_TABLE3, table3
+
+
+class TestTable3:
+    def test_structure_exact(self):
+        t = table3()
+        for name, ref in PAPER_TABLE3.items():
+            assert t[name].endpoints == ref["endpoints"], name
+            assert t[name].switches == ref["switches"], name
+            assert t[name].links == ref["links"], name
+
+    def test_costs_match_paper(self):
+        t = table3()
+        for name, ref in PAPER_TABLE3.items():
+            got = t[name].cost / 1e6
+            assert abs(got - ref["cost_m"]) / ref["cost_m"] < 0.05, \
+                (name, got, ref["cost_m"])
+
+    def test_mpft_cost_per_endpoint_beats_ft3(self):
+        t = table3()
+        assert t["MPFT"].cost_per_endpoint < t["FT3"].cost_per_endpoint
+        assert abs(t["MPFT"].cost_per_endpoint - 4390) < 50   # paper 4.39k
+
+
+class TestSec232:
+    def test_ib_numbers_exact(self):
+        m = paper_h800_ib()
+        assert abs(m.comm_time_s * 1e6 - 120.96) < 0.01
+        assert abs(m.tpot_s * 1e3 - 14.76) < 0.01
+        assert 66 <= m.tokens_per_s <= 69        # paper: 67
+
+    def test_gb200_numbers(self):
+        m = paper_gb200()
+        assert abs(m.comm_time_s * 1e6 - 6.72) < 0.01
+        assert 1150 <= m.tokens_per_s <= 1250    # paper: ~1200
+
+    def test_node_limited_dedup_improves_limit(self):
+        flat = tpu_v5e_ici(dedup=False)
+        dedup = tpu_v5e_ici(dedup=True)
+        assert dedup.tokens_per_s > 1.9 * flat.tokens_per_s
+
+    def test_busbw_saturates(self):
+        small = alltoall_busbw(256 * 1024, 128)
+        large = alltoall_busbw(256 * 2 ** 20, 128)
+        assert small < large
+        assert large > 45e9                      # paper Fig 7: >40 GB/s
+
+
+class TestMFU:
+    def test_causal_ratio_close_to_paper(self):
+        m = mfu(tokens_per_step=1.0, step_time_s=1.0, n_active=37e9,
+                seq_len=4096, n_layers=61, n_heads=128, head_dim=128,
+                peak_flops=1e12)
+        ratio = m["mfu_causal"] / m["mfu_noncausal"]
+        assert abs(ratio - 385 / 432) < 0.05     # paper Table 4
+
+
+class TestCosts:
+    def test_table2_all_archs_positive(self):
+        from repro.configs.base import SHAPES, get_config, list_archs
+        from repro.launch.costs import step_costs
+        for arch in list_archs():
+            c = step_costs(get_config(arch), SHAPES["train_4k"])
+            assert c.flops_total > c.flops_fwd > 0, arch
+            assert c.hbm_bytes > 0 and c.model_flops > 0, arch
+
+    def test_decode_weight_coverage(self):
+        """MoE decode weight traffic: B=1 reads ~active only; B=128 reads
+        ~all experts (the decode memory wall)."""
+        import dataclasses
+        from repro.configs.base import SHAPES, ShapeCfg, get_config
+        from repro.launch.costs import step_costs
+        cfg = get_config("deepseek-v3-671b")
+        big = step_costs(cfg, SHAPES["decode_32k"])
+        small = step_costs(cfg, ShapeCfg("d1", 32768, 1, "decode"))
+        assert big.hbm_bytes / big.tokens < small.hbm_bytes / small.tokens
+        assert big.hbm_bytes > 1.0e12            # ~all 671B touched @ bf16
+
+    def test_cache_dtype_halves_cache_bytes(self):
+        import dataclasses
+        from repro.configs.base import get_config
+        from repro.launch.costs import cache_bytes
+        cfg = get_config("yi-34b")
+        b16 = cache_bytes(cfg, 128, 32768)
+        f8 = cache_bytes(dataclasses.replace(
+            cfg, cache_dtype="float8_e4m3fn"), 128, 32768)
+        assert abs(b16 / f8 - 2.0) < 0.01
