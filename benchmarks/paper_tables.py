@@ -154,13 +154,15 @@ def table4_schedule():
 
 def kernel_benches():
     rows = []
+    from repro import kernels
     from repro.core import fp8
     from repro.kernels.fp8_gemm import ops as fops
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
     w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
-    us = _t(fops.fp8_matmul, x, w, use_ref=True)
-    exact = x @ w
-    y = fops.fp8_matmul(x, w, use_ref=True)
+    with kernels.use_backend("ref", clear_caches=False):
+        us = _t(fops.fp8_matmul, x, w)
+        exact = x @ w
+        y = fops.fp8_matmul(x, w)
     rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
     rows.append(("kernel/fp8_gemm_ref", us, f"rel_err_vs_bf16={rel:.4f} "
                  f"(paper <0.25% loss at model level)"))
@@ -187,8 +189,8 @@ def kernel_benches():
     kr = jax.random.normal(ks[3], (B, T, Rr))
     pos = jnp.broadcast_to(jnp.arange(T), (B, T))
     qpos = jnp.full((B,), T - 1)
-    us = _t(mops.mla_decode, qa, qr, ckv, kr, pos, qpos, scale=0.1,
-            use_ref=True)
+    with kernels.use_backend("ref", clear_caches=False):
+        us = _t(mops.mla_decode, qa, qr, ckv, kr, pos, qpos, scale=0.1)
     rows.append(("kernel/mla_decode_ref", us,
                  f"latent_cache_bytes={(R+Rr)*2}B/token/layer"))
     return rows

@@ -1,0 +1,46 @@
+"""jax version compatibility shims.
+
+The codebase targets current jax (top-level ``jax.shard_map`` with
+``check_vma``, ``jax.sharding.AxisType``); some containers pin older
+0.4.x where those names don't exist yet (``jax.experimental.shard_map``
+with ``check_rep``, meshes without ``axis_types``). Everything that needs
+one of these APIs imports it from here so the version gate lives in one
+place — delete this module when the fleet-wide floor reaches jax >= 0.6.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.6 (check_vma spelling; shard_map is top-level)
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+except ImportError:  # jax 0.4.x: experimental home, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+if hasattr(jax.lax, "axis_size"):  # jax >= 0.5
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis) -> int:
+        # classic idiom: psum of a static 1 constant-folds to the size
+        return jax.lax.psum(1, axis)
+
+
+try:  # jax >= 0.5: explicit axis types on meshes
+    from jax.sharding import AxisType
+
+    def make_mesh(shape, axes) -> Mesh:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # jax 0.4.x: Auto is the only (implicit) behavior
+    AxisType = None
+
+    def make_mesh(shape, axes) -> Mesh:
+        return jax.make_mesh(tuple(shape), tuple(axes))

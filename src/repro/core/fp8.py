@@ -14,7 +14,12 @@ and communication byte counts are genuine. Compute upcasts tiles to fp32 —
 on TPU the MXU runs bf16/fp32; the byte savings (HBM + ICI) are where FP8
 wins on this hardware, as laid out in DESIGN.md §2.
 
-``impl='pallas'`` routes the GEMM through ``repro.kernels.fp8_gemm``.
+``impl='pallas'`` routes the GEMM through the ``fp8_gemm`` kernel op in
+``repro.kernels.registry`` — which backend actually runs (TPU Pallas,
+CPU interpreter, or the jnp oracle) is the registry's backend policy
+(platform auto-detect / ``REPRO_KERNEL_BACKEND`` / ``kernels.use_backend``),
+never a caller kwarg. ``impl='ref'`` keeps the GEMM inline in jnp (the
+training path: both backward GEMMs quantize via ``scaled_matmul_ref``).
 """
 from __future__ import annotations
 
@@ -125,6 +130,8 @@ def scaled_matmul_ref(xq, xs, wq, ws, tile: int = TILE) -> jax.Array:
 def _matmul_qdq(x: jax.Array, w: jax.Array, impl: str) -> jax.Array:
     """y = Q(x) @ Q(w) with fine-grained scales, fp32 accum."""
     if impl == "pallas":
+        # registry-dispatched kernel op; backend (pallas/interpret/ref)
+        # resolved by repro.kernels.registry, not here
         from repro.kernels.fp8_gemm import ops as fp8_ops
         shape = x.shape
         y = fp8_ops.fp8_matmul(x.reshape(-1, shape[-1]), w)

@@ -145,6 +145,7 @@ def mla_decode_step(p: dict, cache: dict, x: jax.Array, *,
                        w_uk.astype(jnp.float32))          # (B,1,nh,rank)
 
     if impl == "pallas":
+        # registry-dispatched kernel op (backend per repro.kernels.registry)
         from repro.kernels.mla_attention import ops as mla_ops
         o_lat = mla_ops.mla_decode(
             q_abs[:, 0], q_rope[:, 0].astype(jnp.float32), ckv, kr, pos,

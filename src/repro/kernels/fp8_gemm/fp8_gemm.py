@@ -48,7 +48,7 @@ def _kernel(xq_ref, xs_ref, wq_ref, ws_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def fp8_gemm(xq: jax.Array, xs: jax.Array, wq: jax.Array, ws: jax.Array,
              *, bm: int = 256, bn: int = 256,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = False) -> jax.Array:
     M, K = xq.shape
     _, N = wq.shape
     assert K % BLOCK == 0 and M % bm == 0 and N % bn == 0, (M, K, N)

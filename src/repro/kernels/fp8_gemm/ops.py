@@ -1,40 +1,60 @@
-"""Jit'd public wrapper: quantize + kernel dispatch with shape padding."""
+"""Registry entry point for the fine-grained-scaled FP8 GEMM.
+
+``fp8_matmul(x, w)`` quantizes both operands (1x128 activation tiles,
+128x128 weight blocks) and dispatches through ``repro.kernels.registry``:
+the ``pallas``/``interpret`` backends run the Pallas kernel with block
+sizes from the shape-bucketed table below; ``ref`` runs the pure-jnp
+oracle. Backend selection (platform / env / ``kernels.use_backend``) and
+the ``interpret`` static flag are the registry's job — callers pass no
+implementation kwargs.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import fp8
+from repro.kernels import registry
 from repro.kernels.fp8_gemm.fp8_gemm import BLOCK, fp8_gemm
 from repro.kernels.fp8_gemm.ref import fp8_gemm_ref
 
+# MXU-aligned output tiles; small problems take the 128 bucket so padding
+# waste stays bounded, large ones amortize bigger tiles (VMEM budget in
+# fp8_gemm.py: ~0.4 MB at 256x256).
+BLOCKS = registry.BlockTable({
+    1: dict(bm=128, bn=128),
+    512: dict(bm=256, bn=256),
+})
 
-def _pad(x, axis, mult):
-    n = x.shape[axis]
-    p = (-n) % mult
-    if p == 0:
-        return x
-    w = [(0, 0)] * x.ndim
-    w[axis] = (0, p)
-    return jnp.pad(x, w)
+fp8_matmul = registry.kernel("fp8_gemm", blocks=BLOCKS)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "use_ref",
-                                             "interpret"))
-def fp8_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
-               use_ref: bool = False, interpret: bool = True) -> jax.Array:
-    """y = Q(x) @ Q(w) with fine-grained scales. x: (M, K); w: (K, N)."""
-    M, K = x.shape
-    _, N = w.shape
-    xp = _pad(_pad(x, 0, bm), 1, BLOCK)
-    wp = _pad(_pad(w, 0, BLOCK), 1, bn)
+def _quantize_padded(x: jax.Array, w: jax.Array, bm: int, bn: int):
+    """Shared prep: pad to the block grid, quantize. x: (M, K); w: (K, N)."""
+    xp = registry.pad_to_multiple(registry.pad_to_multiple(x, 0, bm), 1, BLOCK)
+    wp = registry.pad_to_multiple(registry.pad_to_multiple(w, 0, BLOCK), 1, bn)
     xq, xs = fp8.quantize_tilewise(xp)
     wq, ws = fp8.quantize_blockwise(wp)
-    if use_ref:
-        y = fp8_gemm_ref(xq, xs, wq, ws)
-    else:
-        y = fp8_gemm(xq, xs, wq, ws, bm=min(bm, xp.shape[0]),
-                     bn=min(bn, wp.shape[1]), interpret=interpret)
+    return xq, xs, wq, ws
+
+
+@fp8_matmul.backend("ref")
+@jax.jit
+def _fp8_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    M, N = x.shape[0], w.shape[1]
+    # the oracle reshapes K and N into 128-blocks; M needs no padding
+    xq, xs, wq, ws = _quantize_padded(x, w, 1, BLOCK)
+    return fp8_gemm_ref(xq, xs, wq, ws)[:M, :N]
+
+
+@fp8_matmul.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fp8_matmul_kernel(x: jax.Array, w: jax.Array, *,
+                       interpret: bool) -> jax.Array:
+    M, N = x.shape[0], w.shape[1]
+    bm = BLOCKS.block(M, "bm")
+    bn = BLOCKS.block(N, "bn")
+    xq, xs, wq, ws = _quantize_padded(x, w, bm, bn)
+    y = fp8_gemm(xq, xs, wq, ws, bm=bm, bn=bn, interpret=interpret)
     return y[:M, :N]

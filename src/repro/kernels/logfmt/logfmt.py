@@ -70,7 +70,7 @@ def _code_dtype(n_bits):
 @functools.partial(jax.jit, static_argnames=("n_bits", "bn", "bd",
                                              "interpret"))
 def logfmt_encode(x: jax.Array, *, n_bits: int = 8, bn: int = 128,
-                  bd: int = 512, interpret: bool = True):
+                  bd: int = 512, interpret: bool = False):
     N, D = x.shape
     bn = min(bn, N)
     bd = min(bd, D)
@@ -98,7 +98,7 @@ def logfmt_encode(x: jax.Array, *, n_bits: int = 8, bn: int = 128,
                                              "interpret"))
 def logfmt_decode(codes: jax.Array, mn: jax.Array, step: jax.Array, *,
                   n_bits: int = 8, bn: int = 128, bd: int = 512,
-                  dtype=jnp.float32, interpret: bool = True):
+                  dtype=jnp.float32, interpret: bool = False):
     N, D = codes.shape
     bn = min(bn, N)
     bd = min(bd, D)

@@ -1,5 +1,14 @@
-"""Jit'd wrappers: reshape any (..., D) activation to 2D and run the
-LogFMT codec kernels."""
+"""Registry entry points for the LogFMT-nBit codec.
+
+``encode(x, n_bits=...)`` / ``decode(codes, mn, step, n_bits=...,
+dtype=...)`` reshape any ``(..., D)`` activation to 2D and dispatch
+through ``repro.kernels.registry``: ``pallas``/``interpret`` run the VPU
+codec kernels with block shapes from the shape-bucketed table below;
+``ref`` is the pure-jnp codec from ``repro.core.logfmt``. The feature dim
+must be a multiple of the 128-lane tile (fundamental to the wire format —
+pad upstream); both dims are padded to the block grid here and sliced
+back (padded tiles encode/decode zeros, so the sideband stays exact).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,24 +16,84 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.logfmt.logfmt import logfmt_decode, logfmt_encode
+from repro.kernels import registry
+from repro.kernels.logfmt.logfmt import TILE, logfmt_decode, logfmt_encode
+from repro.kernels.logfmt.ref import logfmt_decode_ref, logfmt_encode_ref
+
+# bn buckets by row count; bd by feature dim (always a TILE multiple)
+BLOCKS = registry.BlockTable({
+    1: dict(bn=8, bd=128),
+    64: dict(bn=64, bd=128),
+    128: dict(bn=128, bd=128),
+    512: dict(bn=128, bd=512),
+})
+
+encode = registry.kernel("logfmt_encode", blocks=BLOCKS)
+decode = registry.kernel("logfmt_decode", blocks=BLOCKS)
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
-def encode(x: jax.Array, *, n_bits: int = 8, interpret: bool = True):
+def _as2d(x: jax.Array) -> jax.Array:
+    assert x.shape[-1] % TILE == 0, (
+        f"LogFMT feature dim must be a multiple of {TILE}, got {x.shape}")
+    return x.reshape(-1, x.shape[-1])
+
+
+def _blocks(n: int, d: int):
+    return BLOCKS.block(n, "bn"), BLOCKS.block(d, "bd")
+
+
+@encode.backend("ref")
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def _encode_ref(x: jax.Array, *, n_bits: int = 8):
     shape = x.shape
-    x2 = x.reshape(-1, shape[-1])
-    codes, mn, step = logfmt_encode(x2, n_bits=n_bits, interpret=interpret)
+    codes, mn, step = logfmt_encode_ref(_as2d(x), n_bits)
     return (codes.reshape(shape), mn.reshape(shape[:-1] + (-1,)),
             step.reshape(shape[:-1] + (-1,)))
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "dtype", "interpret"))
-def decode(codes: jax.Array, mn: jax.Array, step: jax.Array, *,
-           n_bits: int = 8, dtype=jnp.bfloat16, interpret: bool = True):
+@encode.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
+def _encode_kernel(x: jax.Array, *, n_bits: int = 8, interpret: bool):
+    shape = x.shape
+    x2 = _as2d(x)
+    N, D = x2.shape
+    bn, bd = _blocks(N, D)
+    x2 = registry.pad_to_multiple(registry.pad_to_multiple(x2, 0, bn), 1, bd)
+    codes, mn, step = logfmt_encode(x2, n_bits=n_bits, bn=bn, bd=bd,
+                                    interpret=interpret)
+    codes, mn, step = (codes[:N, :D], mn[:N, :D // TILE],
+                       step[:N, :D // TILE])
+    return (codes.reshape(shape), mn.reshape(shape[:-1] + (-1,)),
+            step.reshape(shape[:-1] + (-1,)))
+
+
+@decode.backend("ref")
+@functools.partial(jax.jit, static_argnames=("n_bits", "dtype"))
+def _decode_ref(codes: jax.Array, mn: jax.Array, step: jax.Array, *,
+                n_bits: int = 8, dtype=jnp.bfloat16):
     shape = codes.shape
-    y = logfmt_decode(codes.reshape(-1, shape[-1]),
-                      mn.reshape(-1, mn.shape[-1]),
-                      step.reshape(-1, step.shape[-1]),
-                      n_bits=n_bits, dtype=dtype, interpret=interpret)
+    y = logfmt_decode_ref(codes.reshape(-1, shape[-1]),
+                          mn.reshape(-1, mn.shape[-1]),
+                          step.reshape(-1, step.shape[-1]),
+                          n_bits, dtype=dtype)
     return y.reshape(shape)
+
+
+@decode.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("n_bits", "dtype", "interpret"))
+def _decode_kernel(codes: jax.Array, mn: jax.Array, step: jax.Array, *,
+                   n_bits: int = 8, dtype=jnp.bfloat16, interpret: bool):
+    shape = codes.shape
+    c2 = _as2d(codes)
+    N, D = c2.shape
+    bn, bd = _blocks(N, D)
+    c2 = registry.pad_to_multiple(registry.pad_to_multiple(c2, 0, bn), 1, bd)
+    mn2 = registry.pad_to_multiple(
+        registry.pad_to_multiple(mn.reshape(-1, mn.shape[-1]), 0, bn),
+        1, bd // TILE)
+    step2 = registry.pad_to_multiple(
+        registry.pad_to_multiple(step.reshape(-1, step.shape[-1]), 0, bn),
+        1, bd // TILE)
+    y = logfmt_decode(c2, mn2, step2, n_bits=n_bits, bn=bn, bd=bd,
+                      dtype=dtype, interpret=interpret)
+    return y[:N, :D].reshape(shape)

@@ -72,7 +72,7 @@ def _kernel(qa_ref, qr_ref, ckv_ref, kr_ref, pos_ref, qpos_ref, o_ref,
 def mla_decode_kernel(q_abs: jax.Array, q_rope: jax.Array, ckv: jax.Array,
                       kr: jax.Array, pos: jax.Array, qpos: jax.Array, *,
                       scale: float, bt: int = 256,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = False) -> jax.Array:
     B, H, R = q_abs.shape
     Rr = q_rope.shape[-1]
     T = ckv.shape[1]

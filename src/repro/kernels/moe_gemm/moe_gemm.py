@@ -33,7 +33,7 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "bk", "interpret"))
 def moe_gemm(x: jax.Array, w: jax.Array, *, bc: int = 128, bf: int = 256,
-             bk: int = 256, interpret: bool = True) -> jax.Array:
+             bk: int = 256, interpret: bool = False) -> jax.Array:
     E, C, D = x.shape
     _, _, F = w.shape
     bc, bf, bk = min(bc, C), min(bf, F), min(bk, D)

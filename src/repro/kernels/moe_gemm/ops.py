@@ -1,34 +1,47 @@
-"""Jit'd wrapper with padding for ragged capacity/feature dims."""
+"""Registry entry point for the grouped expert GEMM.
+
+``grouped_matmul(x, w)`` computes ``y[e] = x[e] @ w[e]`` over capacity
+buffers and dispatches through ``repro.kernels.registry``. The capacity
+block ``bc`` comes from the shape-bucketed table below — replacing the
+old ad-hoc ``bc = 128 if C % 128 == 0 else 8`` heuristic — and ragged
+dims are padded to the block grid and sliced back.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.moe_gemm.moe_gemm import moe_gemm
 from repro.kernels.moe_gemm.ref import moe_gemm_ref
 
+# each block is bucketed by its own dim (bc by C, bf by F, bk by D);
+# bf/bk stay MXU-lane-aligned at 128 across all buckets today
+BLOCKS = registry.BlockTable({
+    1: dict(bc=8, bf=128, bk=128),
+    32: dict(bc=32, bf=128, bk=128),
+    128: dict(bc=128, bf=128, bk=128),
+})
 
-def _pad(x, axis, mult):
-    p = (-x.shape[axis]) % mult
-    if p == 0:
-        return x
-    w = [(0, 0)] * x.ndim
-    w[axis] = (0, p)
-    return jnp.pad(x, w)
+grouped_matmul = registry.kernel("moe_gemm", blocks=BLOCKS)
 
 
-@functools.partial(jax.jit, static_argnames=("use_ref", "interpret"))
-def grouped_matmul(x: jax.Array, w: jax.Array, *, use_ref: bool = False,
-                   interpret: bool = True) -> jax.Array:
-    """x: (E, C, D) @ w: (E, D, F) -> (E, C, F)."""
-    if use_ref:
-        return moe_gemm_ref(x, w)
-    E, C, D = x.shape
-    F = w.shape[-1]
-    bc = 128 if C % 128 == 0 else 8
-    xp = _pad(_pad(x, 1, bc), 2, 128)
-    wp = _pad(_pad(w, 1, 128), 2, 128)
-    y = moe_gemm(xp, wp, bc=bc, bf=128, bk=128, interpret=interpret)
+@grouped_matmul.backend("ref")
+@jax.jit
+def _grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return moe_gemm_ref(x, w)
+
+
+@grouped_matmul.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _grouped_matmul_kernel(x: jax.Array, w: jax.Array, *,
+                           interpret: bool) -> jax.Array:
+    (_, C, D), F = x.shape, w.shape[-1]
+    bc = BLOCKS.block(C, "bc")
+    bf = BLOCKS.block(F, "bf")
+    bk = BLOCKS.block(D, "bk")
+    xp = registry.pad_to_multiple(registry.pad_to_multiple(x, 1, bc), 2, bk)
+    wp = registry.pad_to_multiple(registry.pad_to_multiple(w, 1, bk), 2, bf)
+    y = moe_gemm(xp, wp, bc=bc, bf=bf, bk=bk, interpret=interpret)
     return y[:, :C, :F]

@@ -6,25 +6,20 @@ axis is the scarce DCN/optical fabric (the paper's IB analogue); EP
 all-to-all is confined to intra-pod axes by construction (DESIGN.md §5).
 
 Defined as functions so importing this module never touches jax device
-state (device count is locked at first backend init).
+state (device count is locked at first backend init). Mesh creation goes
+through ``repro.compat`` (``axis_types`` only exists on newer jax).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape, axes) -> Mesh:
-    """Arbitrary mesh for tests/examples (e.g. (1, 2, 4) or a pipe axis)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes_for(mesh: Mesh):

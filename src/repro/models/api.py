@@ -37,6 +37,29 @@ from repro.models.param import (ParamSpec, count, init_params, param_structs,
                                 spec_axes)
 
 
+@jax.custom_vjp
+def _diff_barrier(tree):
+    """``optimization_barrier`` with a VJP (jax 0.4.37 has no built-in
+    differentiation rule for it): barrier the cotangents too, so the
+    backward scan keeps the same no-hoisting property as the forward."""
+    return jax.lax.optimization_barrier(tree)
+
+
+def _diff_barrier_fwd(tree):
+    return _diff_barrier(tree), None
+
+
+def _diff_barrier_bwd(_, g):
+    def barrier(leaf):
+        if leaf.dtype == jax.dtypes.float0:   # non-differentiable leaf
+            return leaf
+        return jax.lax.optimization_barrier(leaf)
+    return (jax.tree.map(barrier, g),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Segment table
 # ---------------------------------------------------------------------------
@@ -314,9 +337,9 @@ class Model:
             # barrier the per-layer slices: stops XLA from hoisting dtype
             # converts of sliced operands out of the loop, which would
             # materialize f32 copies of entire (L, ...) weight/cache stacks
-            ps = jax.lax.optimization_barrier(ps)
+            ps = _diff_barrier(ps)
             if cs is not None:
-                cs = jax.lax.optimization_barrier(cs)
+                cs = _diff_barrier(cs)
             h, nc, st = _apply_kind(seg, ps, h, cfg, ctx, cs)
             return shard_act(h), (nc, st)
 

@@ -34,7 +34,9 @@ def act_fn(name: str):
 def linear(x: jax.Array, w: jax.Array, cfg: Optional[ModelConfig] = None,
            b: Optional[jax.Array] = None) -> jax.Array:
     """Dense GEMM; routes through the FP8 fine-grained-scaled path (paper
-    T4) when the config enables it."""
+    T4) when the config enables it. With ``cfg.fp8_impl='pallas'`` the
+    GEMM dispatches through the kernel registry (``repro.kernels``) —
+    backend selection lives there, not in layer code."""
     if cfg is not None and cfg.fp8 and w.ndim == 2 and x.shape[-1] >= 256:
         from repro.core import fp8
         y = fp8.fp8_linear(x, w, impl=cfg.fp8_impl)

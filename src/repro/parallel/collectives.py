@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import logfmt
 
 
@@ -31,7 +32,7 @@ def compressed_psum(x: jax.Array, axis: str, n_bits: int = 8) -> jax.Array:
     d padded to the LogFMT tile internally. Returns the summed array
     (same on every member, like psum).
     """
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     if n == 1:
         return x
     shape = x.shape

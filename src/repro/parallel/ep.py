@@ -37,9 +37,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.core import fp8, moe as moe_mod, routing
 from repro.parallel.context import ParallelCtx
@@ -79,7 +80,7 @@ def _scatter_rows(n_slots: int, dest: jax.Array, keep: jax.Array,
 
 
 def _slice_tokens(x, mask, axis: str):
-    cols = jax.lax.axis_size(axis)
+    cols = compat.axis_size(axis)
     j = jax.lax.axis_index(axis)
     per = x.shape[0] // cols
     xt = jax.lax.dynamic_slice_in_dim(x, j * per, per, axis=0)
@@ -105,7 +106,7 @@ def _group_perm(cols: int, cpg: int, step: int):
 def _group_allgather(z: jax.Array, axis: str, cpg: int) -> jax.Array:
     """z: this column's hop-1 chunk (owner rank = col%cpg). Returns
     (cpg, *z.shape) with index r = the chunk owned by group-rank r."""
-    cols = jax.lax.axis_size(axis)
+    cols = compat.axis_size(axis)
     rj = jax.lax.axis_index(axis) % cpg
     received = [z]                                   # rank rj
     for step in range(1, cpg):
@@ -118,7 +119,7 @@ def _group_allgather(z: jax.Array, axis: str, cpg: int) -> jax.Array:
 def _group_reduce(parts: jax.Array, axis: str, cpg: int) -> jax.Array:
     """parts: (cpg, ...) this column's partial outputs indexed by owner
     rank. Returns this column's own chunk summed over the group."""
-    cols = jax.lax.axis_size(axis)
+    cols = compat.axis_size(axis)
     rj = jax.lax.axis_index(axis) % cpg
     acc = jnp.take(parts, rj, axis=0)
     for step in range(1, cpg):
@@ -135,7 +136,7 @@ def _group_reduce(parts: jax.Array, axis: str, cpg: int) -> jax.Array:
 def _ep_flat_local(wg, bias, w1, w3, w2, x, mask, cfg: ModelConfig,
                    axis: str, wire: str = "fp8"):
     mc = cfg.moe
-    cols = jax.lax.axis_size(axis)
+    cols = compat.axis_size(axis)
     E_l = mc.num_experts // cols
     xt, mt = _slice_tokens(x, mask, axis)
     t, d = xt.shape
@@ -196,7 +197,7 @@ def _ep_flat_local(wg, bias, w1, w3, w2, x, mask, cfg: ModelConfig,
 def _ep_dedup_local(wg, bias, w1, w3, w2, x, mask, cfg: ModelConfig,
                     axis: str, wire: str = "fp8"):
     mc = cfg.moe
-    cols = jax.lax.axis_size(axis)
+    cols = compat.axis_size(axis)
     G = mc.num_groups
     assert cols % G == 0, (cols, G)
     cpg = cols // G

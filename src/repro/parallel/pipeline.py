@@ -30,8 +30,9 @@ from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def _shift(x: jax.Array, axis: str, n: int) -> jax.Array:

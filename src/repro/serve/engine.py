@@ -61,7 +61,13 @@ class ServeEngine:
         return [i for i, r in enumerate(self.active) if r is None]
 
     def add_request(self, req: Request, extras: Optional[Dict] = None):
-        slot = self.free_slots()[0]
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError(
+                f"no free slots: all {self.slots} slots are occupied; "
+                "call step() until a request completes before admitting "
+                "more (see free_slots())")
+        slot = free[0]
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
         batch = {"tokens": toks}
         if extras:
@@ -166,6 +172,11 @@ def _splice(batch_cache, one_cache, slot: int):
                             else 0
                         pad = jnp.pad(pad, widths, constant_values=cval)
                 return big.at[tuple(idx)].set(pad.astype(big.dtype))
-        # no batch axis (e.g. per-layer slot counters): keep the larger
-        return big if big.shape == small.shape else big
+        # No batch axis found and shapes differ (the equal-shape case
+        # returned above): this leaf cannot be spliced — dropping it
+        # silently would corrupt the batch cache, so fail loudly.
+        raise ValueError(
+            f"_splice: cache leaf shapes are incompatible — batch cache "
+            f"{big.shape} vs prefill cache {small.shape}: no axis where "
+            f"the prefill leaf has size 1 and the batch leaf differs")
     return jax.tree.map(f, batch_cache, one_cache)

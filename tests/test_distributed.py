@@ -23,14 +23,12 @@ def run_sub(code: str, devices: int = 8) -> str:
 
 HEADER = """
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 import numpy as np
+from repro.compat import make_mesh as mk
 from repro.configs.base import get_config, smoke_config
 from repro.core import moe as moe_mod
 from repro.models.api import build_model
 from repro.parallel import context as pctx_mod, ep
-mk = lambda shape, axes: jax.make_mesh(shape, axes,
-                                       axis_types=(AxisType.Auto,)*len(axes))
 """
 
 
@@ -130,10 +128,10 @@ class TestCollectives:
     def test_compressed_psum(self):
         out = run_sub("""
 import jax, jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.parallel import collectives
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 256), jnp.float32)
 def f(xl):
     return collectives.compressed_psum(xl[0], "pod", n_bits=10)[None]
@@ -150,9 +148,9 @@ print("compressed psum OK")
     def test_pipeline_fwd_and_grad(self):
         out = run_sub("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.parallel import pipeline
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 Pn, M, mb, d = 4, 8, 2, 16
 Ws = jax.random.normal(jax.random.PRNGKey(0), (Pn, d, d)) * 0.3
 stage = lambda w, x: jnp.tanh(x @ w)

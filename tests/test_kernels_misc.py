@@ -1,29 +1,10 @@
-"""moe_gemm kernel sweeps + chunked-attention equivalence + SSD/RG-LRU
-numerics (property tests on the recurrences)."""
+"""Chunked-attention equivalence + SSD/RG-LRU numerics (property tests on
+the recurrences). moe_gemm parity moved to test_kernel_registry.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
-from repro.kernels.moe_gemm import ops as mops
-from repro.kernels.moe_gemm.ref import moe_gemm_ref
-
-
-class TestMoEGemm:
-    @pytest.mark.parametrize("dims", [(2, 16, 32, 24), (4, 128, 128, 128),
-                                      (1, 8, 256, 64), (3, 40, 72, 96)])
-    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-    def test_sweep(self, rng, dims, dtype):
-        E, C, D, F = dims
-        x = jax.random.normal(rng, (E, C, D)).astype(dtype)
-        w = jax.random.normal(jax.random.PRNGKey(1), (E, D, F)).astype(dtype)
-        got = mops.grouped_matmul(x, w)
-        ref = moe_gemm_ref(x, w)
-        tol = 1e-5 if dtype == jnp.float32 else 3e-2
-        np.testing.assert_allclose(np.asarray(got, np.float32),
-                                   np.asarray(ref, np.float32),
-                                   rtol=tol, atol=tol)
+from _hypothesis_compat import given, settings, st
 
 
 class TestChunkedAttention:

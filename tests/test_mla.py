@@ -62,27 +62,8 @@ class TestMLA:
 
 
 class TestMLAKernel:
-    @pytest.mark.parametrize("dims", [(2, 8, 64, 16, 64), (1, 4, 128, 32, 96),
-                                      (3, 16, 32, 8, 128)])
-    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-    def test_kernel_sweep(self, rng, dims, dtype):
-        from repro.kernels.mla_attention import ops
-        from repro.kernels.mla_attention.ref import mla_decode_ref
-        B, H, R, Rr, T = dims
-        ks = jax.random.split(rng, 4)
-        qa = jax.random.normal(ks[0], (B, H, R), jnp.float32)
-        qr = jax.random.normal(ks[1], (B, H, Rr), jnp.float32)
-        ckv = jax.random.normal(ks[2], (B, T, R)).astype(dtype)
-        kr = jax.random.normal(ks[3], (B, T, Rr)).astype(dtype)
-        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
-        npos = (T * 3) // 4
-        pos = jnp.where(pos < npos, pos, -1)
-        qpos = jnp.full((B,), npos - 1)
-        got = ops.mla_decode(qa, qr, ckv, kr, pos, qpos, scale=0.11, bt=32)
-        ref = mla_decode_ref(qa, qr, ckv, kr, pos, qpos, scale=0.11)
-        tol = 1e-4 if dtype == jnp.float32 else 2e-2
-        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                                   rtol=tol, atol=tol)
+    # kernel-vs-oracle parity sweeps live in test_kernel_registry.py
+    # (TestBackendParity) — one sweep for every registered kernel.
 
     def test_model_decode_with_pallas_impl(self, mla_setup, rng):
         """End-to-end: mla_decode_step(impl='pallas') == impl='xla'."""

@@ -62,6 +62,20 @@ class TestEngine:
         eng.run_until_done()
         assert eng.stats["tokens"] >= 16
 
+    def test_add_request_when_full_is_loud(self, dsv3_cfg):
+        """Admission beyond capacity must raise a clear RuntimeError, not
+        a bare IndexError from free_slots()[0]."""
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32)
+        eng.add_request(Request(0, np.arange(4), max_new=8))
+        assert not eng.free_slots()
+        with pytest.raises(RuntimeError, match="no free slots"):
+            eng.add_request(Request(1, np.arange(4), max_new=8))
+        # draining the engine frees the slot and admission works again
+        eng.run_until_done()
+        assert eng.free_slots()
+        eng.add_request(Request(2, np.arange(4), max_new=2))
+        eng.run_until_done()
+
     def test_mtp_draft_accounting(self, dsv3_cfg):
         eng = ServeEngine(dsv3_cfg, slots=2, max_len=32, use_mtp=True)
         eng.add_request(Request(0, np.arange(6), max_new=6))

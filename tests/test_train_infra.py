@@ -93,8 +93,8 @@ class TestCheckpoint:
         tree = {"w": jax.random.normal(rng, (8, 4))}
         with tempfile.TemporaryDirectory() as d:
             ckpt.save(d, 1, tree)
-            mesh = jax.make_mesh((1,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.compat import make_mesh
+            mesh = make_mesh((1,), ("data",))
             sh = {"w": NamedSharding(mesh, P("data", None))}
             got, _ = ckpt.restore(d, tree, shardings=sh)
             assert got["w"].sharding == sh["w"]
