@@ -1,4 +1,6 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# The serve_bench suite additionally writes BENCH_serve.json (tokens/s,
+# TTFT, dispatches/token for the fused serving engine).
 import sys
 
 sys.path.insert(0, "src")
@@ -6,6 +8,7 @@ sys.path.insert(0, "src")
 
 def main() -> None:
     from benchmarks import paper_tables as pt
+    from benchmarks import serve_bench
 
     suites = [
         pt.table1_kv_cache,
@@ -17,6 +20,7 @@ def main() -> None:
         pt.kernel_benches,
         pt.mtp_bench,
         pt.ep_dedup_bytes,
+        serve_bench.suite,
     ]
     print("name,us_per_call,derived")
     for suite in suites:

@@ -120,27 +120,61 @@ class DispatchPlan(NamedTuple):
     drop_frac: jax.Array  # scalar fraction of dropped assignments
 
 
-def dispatch_plan(expert_idx: jax.Array, E: int, C: int) -> DispatchPlan:
+def capacity_dynamic(tokens: jax.Array, mc: MoEConfig,
+                     experts: Optional[int] = None,
+                     k: Optional[int] = None) -> jax.Array:
+    """``capacity`` for a *traced* token count (bucketed prefill): the keep
+    threshold a prompt of this many real tokens would get in an
+    exact-length dispatch, while the buffer shape stays static."""
+    e = experts or mc.num_experts
+    c = jnp.ceil(tokens * (k or mc.top_k) * mc.capacity_factor
+                 / e).astype(jnp.int32)
+    return jnp.maximum(8, -(-c // 8) * 8)
+
+
+def dispatch_plan(expert_idx: jax.Array, E: int, C: int,
+                  valid: Optional[jax.Array] = None,
+                  cap_limit: Optional[jax.Array] = None) -> DispatchPlan:
     """expert_idx: (T, k). Slot assignment per (token, choice), capacity C
-    per expert, earlier tokens win (stable)."""
+    per expert, earlier tokens win (stable).
+
+    ``valid`` (T,) demotes pad tokens below every real token in the
+    per-expert ranking and drops them outright, so bucket padding can
+    never displace a real token from a capacity slot; ``cap_limit`` (a
+    traced scalar <= C) additionally applies the exact-length keep
+    threshold so results match an unpadded dispatch token-for-token."""
     flat = expert_idx.reshape(-1).astype(jnp.int32)
     n = flat.shape[0]
-    order = jnp.argsort(flat, stable=True)
-    sorted_e = flat[order]
-    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    if valid is None:
+        key, stride = flat, 1
+    else:
+        validk = jnp.repeat(valid.astype(jnp.int32), expert_idx.shape[-1])
+        key, stride = flat * 2 + (1 - validk), 2
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    sorted_e = sorted_key // stride
+    starts = jnp.searchsorted(sorted_key,
+                              stride * jnp.arange(E, dtype=sorted_key.dtype))
     rank_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
     rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
-    keep = rank < C
+    keep = rank < (C if cap_limit is None else cap_limit)
+    if valid is not None:
+        keep = keep & (validk > 0)
+        denom = jnp.maximum(validk.sum(), 1)
+    else:
+        denom = n
     dest = jnp.where(keep, flat * C + rank, 0)
-    drop = 1.0 - keep.mean()
+    drop = 1.0 - keep.sum() / denom
     return DispatchPlan(dest, keep, drop)
 
 
 def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig,
-            capacity_override: Optional[int] = None
+            capacity_override: Optional[int] = None,
+            valid: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, routing.RouteResult, jax.Array]:
     """Single-shard MoE layer (all experts local). x: (B, S, d) or (T, d).
-    Returns (y, route_result, drop_frac)."""
+    ``valid`` masks bucket-padding tokens out of the capacity contest (see
+    ``dispatch_plan``). Returns (y, route_result, drop_frac)."""
     mc = cfg.moe
     shape = x.shape
     xt = x.reshape(-1, shape[-1])
@@ -148,7 +182,13 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig,
     rr = routing.route(xt, p["w_gate"], mc,
                        bias=p.get("bias") if mc.router_bias else None)
     C = capacity_override or capacity(T, mc)
-    plan = dispatch_plan(rr.expert_idx, mc.num_experts, C)
+    if valid is None:
+        plan = dispatch_plan(rr.expert_idx, mc.num_experts, C)
+    else:
+        v = valid.reshape(-1)
+        cap_eff = jnp.minimum(C, capacity_dynamic(v.sum(), mc))
+        plan = dispatch_plan(rr.expert_idx, mc.num_experts, C,
+                             valid=v, cap_limit=cap_eff)
 
     k = mc.top_k
     xk = jnp.repeat(xt, k, axis=0)                        # (T*k, d)

@@ -86,3 +86,22 @@ def mtp_draft(p: dict, h_last: jax.Array, emb_next: jax.Array, *,
     h = mtp_hidden(pm, h_last, emb_next, cfg=cfg, positions=positions,
                    block_apply=block_apply)
     return unemb_fn(h)
+
+
+def mtp_draft_tokens(params: dict, cache: dict, cfg: ModelConfig,
+                     last_tokens: jax.Array, positions: jax.Array,
+                     embed_fn: Callable, unembed_fn: Callable) -> jax.Array:
+    """Greedy draft token per slot, traced inside the fused decode loop.
+
+    last_tokens/positions: (B,) — the token each slot just emitted and its
+    successor position. Reads the main model's last hidden from
+    ``cache['mtp_h']``; returns (B,) int32 draft of the token-after-next.
+    """
+    from repro.models import transformer as tfm
+    logits = mtp_draft(
+        params["mtp"], cache["mtp_h"], embed_fn(last_tokens[:, None]),
+        cfg=cfg, positions=positions[:, None],
+        block_apply=lambda p, x, positions: tfm.block_apply(
+            p, x, cfg, dict(positions=positions, causal=True), None)[0],
+        unemb_fn=unembed_fn)
+    return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)

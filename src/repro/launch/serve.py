@@ -1,8 +1,13 @@
-"""Serving launcher: batched decode with optional MTP speculative drafting
-and prefill/decode disaggregation.
+"""Serving launcher: fused-chunk batched decode with optional MTP
+speculative drafting and prefill/decode disaggregation.
 
 ``PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b
---smoke --requests 8 [--disagg] [--mtp]``
+--smoke --requests 8 [--disagg] [--mtp] [--chunk 8] [--temperature 0.7]``
+
+Requests are queued with ``submit()``; ``step()``/``run()`` admit them into
+slots (bucketed jitted prefill + jitted cache splice) and drive fused
+k-step decode chunks — the steady-state dispatch count is printed so the
+one-dispatch-per-chunk property is visible from the CLI.
 """
 from __future__ import annotations
 
@@ -19,6 +24,9 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--mtp", action="store_true")
     ap.add_argument("--disagg", action="store_true")
     args = ap.parse_args()
@@ -26,6 +34,7 @@ def main():
     from repro.configs.base import get_config, smoke_config
     from repro.serve.disagg import Disaggregator
     from repro.serve.engine import Request, ServeEngine
+    from repro.serve.speculative import measured
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -36,23 +45,39 @@ def main():
 
     if args.disagg:
         eng = Disaggregator(cfg, decode_slots=args.slots,
-                            max_len=args.max_len, use_mtp=args.mtp)
+                            max_len=args.max_len, use_mtp=args.mtp,
+                            chunk=args.chunk, temperature=args.temperature,
+                            top_k=args.top_k)
         for r in reqs:
             eng.submit(r)
         eng.run()
         stats = eng.decode.stats
         print(f"[serve] disaggregated: handoff "
               f"{eng.handoff_bytes / 1e6:.2f} MB, {stats}")
+        eng = eng.decode
     else:
         eng = ServeEngine(cfg, slots=args.slots, max_len=args.max_len,
-                          use_mtp=args.mtp)
+                          use_mtp=args.mtp, chunk=args.chunk,
+                          temperature=args.temperature, top_k=args.top_k)
         for r in reqs:
-            while not eng.free_slots():
-                eng.step()
-            eng.add_request(r)
+            eng.submit(r)
         eng.run_until_done()
         print(f"[serve] {eng.stats} acceptance="
               f"{eng.acceptance_rate():.2f}")
+    decode_dispatches = (eng.stats["dispatches"] - eng.stats["prefills"]
+                         - eng.stats["splices"])
+    decode_tokens = eng.stats["tokens"] - eng.stats["first_tokens"]
+    if decode_tokens:
+        print(f"[serve] decode dispatches/token = "
+              f"{decode_dispatches / decode_tokens:.3f} "
+              f"(chunk={args.chunk}, prefill buckets compiled: "
+              f"{eng.compiled_prefill_buckets})")
+    if args.mtp and not eng.use_mtp:
+        print(f"[serve] --mtp ignored: {cfg.name} has no MTP module")
+    elif args.mtp:
+        m = measured(eng)
+        print(f"[serve] MTP speedup model: acceptance={m.acceptance:.2f} "
+              f"-> {m.tps_multiplier:.2f}x TPS")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt {list(r.prompt[:6])}... -> "
               f"{r.out[:args.max_new]}")

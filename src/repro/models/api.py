@@ -6,9 +6,14 @@ suitable for jit/pjit:
     specs()                        ParamSpec pytree (source of truth)
     init(rng)                      materialized params
     loss(params, batch, rng)       (scalar, metrics) — teacher forcing (+MTP)
-    prefill(params, batch)         (logits_last, cache)
+    prefill(params, batch)         (logits_last, cache); ``lengths=`` makes
+                                   it bucket-friendly (pad-masked prompts)
     decode_step(params, cache, tokens, positions) (logits, cache)
+    decode_loop(params, cache, state, k)  k fused decode steps under one
+                                   lax.scan: on-device sampling, EOS/max-len
+                                   masking, MTP drafting + acceptance stats
     init_cache(batch, max_len)     cache pytree (zeros)
+    cache_batch_axes(batch, max_len)  declared batch-axis index per leaf
     input_specs(shape_cfg)         ShapeDtypeStruct stand-ins per phase
 
 Models are assembled from scanned **segments**; each segment is a stack of
@@ -58,6 +63,20 @@ def _diff_barrier_bwd(_, g):
 
 
 _diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
+def sample_logits(logits: jax.Array, key: jax.Array, temperature: float,
+                  top_k: int = 0) -> jax.Array:
+    """Greedy (temperature<=0) or temperature/top-k sampling over the last
+    axis. Shared by the fused decode loop and the serving engine's
+    first-token pick so both phases draw from the same policy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -420,21 +439,43 @@ class Model:
             loss = loss + mtp_l
         return loss, metrics
 
-    def prefill(self, params, batch, extra_slots: int = 0):
-        """Process the prompt; returns (last-position logits, decode cache)."""
+    def prefill(self, params, batch, extra_slots: int = 0, lengths=None):
+        """Process the prompt; returns (last-position logits, decode cache).
+
+        ``lengths`` (B,) enables the bucketed path: ``tokens`` is padded on
+        the right to a static bucket length S and only the first
+        ``lengths[b]`` positions of row b are real. Pad positions are
+        harmless under causal attention (real queries never attend to
+        later keys), are masked out of recurrent-state updates and the MoE
+        capacity contest (``ctx['valid']``: pads rank below every real
+        token and the keep threshold is the exact-length capacity), never
+        enter the decode cache (cache ``pos`` is -1 on pad slots), and the
+        returned logits are taken at position ``lengths-1`` per row. One compile then serves every prompt length
+        in the bucket.
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         ctx = dict(positions=pos, causal=True, collect_cache=True)
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            ctx["valid"] = pos < lengths[:, None]
+            ctx["prompt_lengths"] = lengths
         h, entries, _, ctx = self._backbone(params, tokens, ctx, None, batch)
-        logits = self._unembed(params, h[:, -1:])
-        cache = self._assemble_cache(entries, B, S, extra_slots, ctx, batch)
+        if lengths is None:
+            h_last = h[:, -1:]
+        else:
+            idx = jnp.clip(lengths - 1, 0, S - 1)[:, None, None]
+            h_last = jnp.take_along_axis(h, idx, axis=1)
+        logits = self._unembed(params, h_last)
+        cache = self._assemble_cache(entries, B, S, extra_slots, ctx, batch,
+                                     lengths)
         if cfg.mtp:
-            cache["mtp_h"] = h[:, -1:]
+            cache["mtp_h"] = h_last
         return logits, cache
 
-    def _assemble_cache(self, entries, B, S, extra, ctx, batch):
+    def _assemble_cache(self, entries, B, S, extra, ctx, batch, lengths=None):
         """Turn per-layer prefill entries into decode cache buffers."""
         cfg = self.cfg
         T = S + extra
@@ -443,39 +484,38 @@ class Model:
             if seg.name not in entries:
                 continue
             e = entries[seg.name]
-            cache[seg.name] = self._entries_to_cache(seg, e, B, S, T)
+            cache[seg.name] = self._entries_to_cache(seg, e, B, S, T, lengths)
         if cfg.family in ("encdec", "vlm"):
             cache["memory"] = ctx["memory"]
         return cache
 
-    def _entries_to_cache(self, seg: Segment, e, B, S, T):
+    def _entries_to_cache(self, seg: Segment, e, B, S, T, lengths=None):
         cfg = self.cfg
 
         if seg.kind in ("dense", "moe", "decoder", "encoder"):
             Tc = min(T, seg.window) if seg.window else T
-            keep = min(S, Tc)
-
             cdt = jnp.dtype(cfg.cache_dtype_())
+            if lengths is None:
+                lengths = jnp.full((B,), S, jnp.int32)
+            # Ring layout: cache slot t holds the newest prompt token whose
+            # position p satisfies p ≡ t (mod Tc). Solving for p gives a
+            # per-slot gather that works for both the full (Tc >= len) and
+            # windowed (Tc < len) cases and for traced per-row lengths.
+            t = jnp.arange(Tc, dtype=jnp.int32)
+            n_t = (lengths[:, None] - 1 - t[None, :]) // Tc
+            src = t[None, :] + n_t * Tc                       # (B, Tc)
+            valid = (src >= 0) & (src < lengths[:, None])
+            srcc = jnp.clip(src, 0, S - 1)
 
             def prep(x):
-                """(n,B,S,...) entries -> (n,B,Tc,...): keep the last
-                ``keep`` tokens; ring layout slot = position %% Tc."""
-                x = x[:, :, S - keep:].astype(cdt)
-                padw = [(0, 0)] * x.ndim
-                padw[2] = (0, Tc - keep)
-                x = jnp.pad(x, padw)
-                if S > Tc:
-                    x = jnp.roll(x, S % Tc, axis=2)
-                return x
+                """(n,B,S,...) entries -> (n,B,Tc,...) ring buffers."""
+                idx = srcc.reshape((1, B, Tc) + (1,) * (x.ndim - 3))
+                g = jnp.take_along_axis(x, idx, axis=2)
+                m = valid.reshape((1, B, Tc) + (1,) * (x.ndim - 3))
+                return jnp.where(m, g, 0).astype(cdt)
 
-            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
-                                   (seg.n, B, S))[:, :, S - keep:]
-            pos = jnp.pad(pos, [(0, 0), (0, 0), (0, Tc - keep)],
-                          constant_values=-1)
-            if S > Tc:
-                # ring layout: token at position p sits at slot p %% Tc
-                roll = S % Tc
-                pos = jnp.roll(pos, roll, axis=2)
+            pos = jnp.where(valid, src, -1)
+            pos = jnp.broadcast_to(pos[None], (seg.n, B, Tc))
             if cfg.attention == "mla":
                 ckv, kr = e
                 return dict(ckv=prep(ckv), kr=prep(kr), pos=pos)
@@ -483,12 +523,16 @@ class Model:
             return dict(k=prep(k), v=prep(v), pos=pos)
         if seg.kind == "dense_moe":
             return {"dense": self._entries_to_cache(
-                        Segment(seg.name, "dense", seg.n), e["dense"], B, S, T),
+                        Segment(seg.name, "dense", seg.n), e["dense"], B, S,
+                        T, lengths),
                     "moe": self._entries_to_cache(
-                        Segment(seg.name, "dense", seg.n), e["moe"], B, S, T)}
+                        Segment(seg.name, "dense", seg.n), e["moe"], B, S,
+                        T, lengths)}
         if seg.kind == "vision_pattern":
-            return {"selfs": self._vision_cache(e["selfs"], B, S, T)}
+            return {"selfs": self._vision_cache(e["selfs"], B, S, T, lengths)}
         if seg.kind == "ssd":
+            # conv tail / final state are already length-exact: the apply fn
+            # gates pad positions out of the recurrence (ctx['valid']).
             conv, state = e
             return dict(conv=conv, state=state)
         if seg.kind in ("rg3", "rg_tail"):
@@ -499,11 +543,12 @@ class Model:
                     out[key] = dict(conv=conv, h=hlast)
                 else:
                     sub = Segment(seg.name, "dense", seg.n, window=seg.window)
-                    out[key] = self._entries_to_cache(sub, ee, B, S, T)
+                    out[key] = self._entries_to_cache(sub, ee, B, S, T,
+                                                      lengths)
             return out
         raise ValueError(seg.kind)
 
-    def _vision_cache(self, sub, B, S, T):
+    def _vision_cache(self, sub, B, S, T, lengths=None):
         k, v = sub
         # (n, k, B, S, KV, hd) -> buffers (n, k, B, T, KV, hd)
         def pad(x):
@@ -511,6 +556,8 @@ class Model:
                                (0, 0), (0, 0)])
         n, kk = k.shape[0], k.shape[1]
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (n, kk, B, S))
+        if lengths is not None:
+            pos = jnp.where(pos < lengths[None, None, :, None], pos, -1)
         pos = jnp.pad(pos, [(0, 0), (0, 0), (0, 0), (0, T - S)],
                       constant_values=-1)
         return dict(k=pad(k), v=pad(v), pos=pos)
@@ -531,6 +578,86 @@ class Model:
             out_cache["mtp_h"] = h
         return logits, out_cache
 
+    def init_decode_state(self, batch: int, seed: int = 0) -> Dict[str, Any]:
+        """Per-slot on-device decode state consumed by ``decode_loop``.
+
+        tokens/positions: last emitted token and its next position per slot.
+        active: slot occupancy mask. left: decode-token budget (max-len
+        masking). eos: per-slot EOS id (-1 = none). draft: MTP draft of the
+        next token (-1 = no outstanding draft). drafts/accepted: on-device
+        speculative-decoding counters for this chunk.
+        """
+        B = batch
+        return dict(
+            tokens=jnp.zeros((B,), jnp.int32),
+            positions=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            left=jnp.zeros((B,), jnp.int32),
+            eos=-jnp.ones((B,), jnp.int32),
+            draft=-jnp.ones((B,), jnp.int32),
+            rng=jax.random.PRNGKey(seed),
+            drafts=jnp.zeros((), jnp.int32),
+            accepted=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_loop(self, params, cache, state, k: int, *,
+                    temperature: float = 0.0, top_k: int = 0,
+                    use_mtp: bool = False):
+        """Run ``k`` fused decode steps under one ``lax.scan``.
+
+        Everything the per-token host loop used to do round-trips for
+        happens on device: sampling (greedy, or temperature/top-k via the
+        threaded PRNG key), per-slot EOS + budget masking, and — when
+        ``use_mtp`` — the MTP draft for the next step plus draft-acceptance
+        counting. One dispatch emits up to ``B*k`` tokens.
+
+        state: see ``init_decode_state``. Returns ``(tokens (B,k),
+        emitted (B,k) bool, cache, state)`` — tokens are -1 where the slot
+        was inactive at that step.
+        """
+        cfg = self.cfg
+        assert not use_mtp or cfg.mtp is not None
+
+        def sample(logits, key):
+            return sample_logits(logits, key, temperature, top_k)
+
+        def body(carry, _):
+            cache, st = carry
+            tok, pos = st["tokens"], st["positions"]
+            active, left = st["active"], st["left"]
+            eos, draft = st["eos"], st["draft"]
+            logits, cache = self.decode_step(params, cache, tok[:, None],
+                                             pos[:, None])
+            key, sub = jax.random.split(st["rng"])
+            nxt = sample(logits[:, 0], sub)
+            # speculative accounting: did the previous step's draft match?
+            has_draft = active & (draft >= 0)
+            drafts = st["drafts"] + has_draft.sum(dtype=jnp.int32)
+            accepted = st["accepted"] + (
+                has_draft & (draft == nxt)).sum(dtype=jnp.int32)
+            emitted = jnp.where(active, nxt, -1)
+            pos2 = pos + active
+            left2 = left - active
+            done = active & (((eos >= 0) & (nxt == eos)) | (left2 <= 0))
+            active2 = active & ~done
+            tok2 = jnp.where(active, nxt, tok)
+            if use_mtp:
+                d = mtp_mod.mtp_draft_tokens(
+                    params, cache, cfg, tok2, pos2,
+                    embed_fn=lambda t: self._embed(params, t),
+                    unembed_fn=lambda hh: self._unembed(params, hh))
+                draft2 = jnp.where(active2, d, -1)
+            else:
+                draft2 = jnp.full_like(draft, -1)
+            st2 = dict(tokens=tok2, positions=pos2, active=active2,
+                       left=left2, eos=eos, draft=draft2, rng=key,
+                       drafts=drafts, accepted=accepted)
+            return (cache, st2), (emitted, active)
+
+        (cache, state), (toks, was_active) = jax.lax.scan(
+            body, (cache, state), None, length=k)
+        return toks.T, was_active.T, cache, state
+
     # -- cache/init specs ----------------------------------------------------
     def init_cache(self, batch: int, max_len: int):
         cache: Dict[str, Any] = {}
@@ -547,6 +674,27 @@ class Model:
 
     def cache_structs(self, batch: int, max_len: int):
         return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_batch_axes(self, batch: int, max_len: int):
+        """Pytree (matching ``init_cache``) of each leaf's batch-axis index.
+
+        Declared per cache family rather than inferred from shapes: every
+        layer-stacked family (MLA latent, GQA ring K/V, SSM conv+state,
+        rg-lru conv+h) carries batch at axis 1 behind the stacked-layers
+        axis; the vision self-attn cache nests one more scan axis (axis 2);
+        encoder memory and the MTP hidden are unstacked (axis 0). Used by
+        the serving engine's jitted slot-admission splice.
+        """
+        structs = self.cache_structs(batch, max_len)
+        axes: Dict[str, Any] = {}
+        for seg in self.segments:
+            ax = 2 if seg.kind == "vision_pattern" else 1
+            axes[seg.name] = jax.tree.map(lambda _: ax, structs[seg.name])
+        if "memory" in structs:
+            axes["memory"] = 0
+        if "mtp_h" in structs:
+            axes["mtp_h"] = 0
+        return axes
 
     # -- dry-run inputs --------------------------------------------------------
     def input_specs(self, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:

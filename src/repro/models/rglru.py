@@ -58,13 +58,19 @@ def recurrent_block_specs(cfg: ModelConfig, prefix: Tuple[int, ...]) -> dict:
     return _prefixed(specs, prefix)
 
 
-def _rg_lru(x: jax.Array, p: dict, h0: Optional[jax.Array]):
-    """x: (B,S,w) fp32. Returns (y, h_last)."""
+def _rg_lru(x: jax.Array, p: dict, h0: Optional[jax.Array],
+            valid: Optional[jax.Array] = None):
+    """x: (B,S,w) fp32. Returns (y, h_last). ``valid`` (B,S) gates padded
+    positions to the identity update (a=1, input 0) so the carried state —
+    including h_last — is the state after the last real token."""
     r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["wa"]) + p["ba"])
     i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["wi"]) + p["bi"])
     log_a = -C_EXP * jax.nn.softplus(p["lam"]) * r      # log(a^(c r)), a=sig(lam)
     a = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        gated = jnp.where(valid[..., None], gated, 0.0)
 
     # associative scan over time: h_t = a_t h_{t-1} + b_t
     def comb(c1, c2):
@@ -85,7 +91,10 @@ def recurrent_block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
     branch_y = jax.nn.gelu(Lyr.linear(h, p["w_y"], cfg))
     bx = Lyr.linear(h, p["w_x"], cfg)
     conv_state = cache["conv"] if cache is not None else None
-    bx, new_conv = _causal_conv(bx, p["conv_w"], p["conv_b"], conv_state)
+    prompt_lengths = (ctx.get("prompt_lengths")
+                      if cache is None and ctx.get("collect_cache") else None)
+    bx, new_conv = _causal_conv(bx, p["conv_w"], p["conv_b"], conv_state,
+                                lengths=prompt_lengths)
     bx32 = bx.astype(jnp.float32)
 
     if cache is not None:
@@ -100,7 +109,9 @@ def recurrent_block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
         new_cache = dict(conv=new_conv.astype(cache["conv"].dtype),
                          h=hn.astype(cache["h"].dtype))
     else:
-        y, h_last = _rg_lru(bx32, p, None)
+        y, h_last = _rg_lru(bx32, p, None,
+                            valid=(ctx.get("valid")
+                                   if ctx.get("collect_cache") else None))
         new_cache = ((new_conv, h_last) if ctx.get("collect_cache") else None)
 
     y = (y.astype(x.dtype) * branch_y)

@@ -65,9 +65,14 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
 
 
 def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array] = None):
+                 state: Optional[jax.Array] = None,
+                 lengths: Optional[jax.Array] = None):
     """Depthwise causal conv, width K. xbc: (B,S,C). state: (B,K-1,C) tail of
-    previous tokens (decode). Returns (out, new_state)."""
+    previous tokens (decode). Returns (out, new_state).
+
+    ``lengths`` (B,) supports bucket-padded prefill: the returned conv tail
+    is gathered per row at the last K-1 *real* positions (pads sit after
+    them, so real conv outputs are unaffected either way)."""
     K = w.shape[0]
     if state is None:
         pad = jnp.zeros(xbc.shape[:1] + (K - 1,) + xbc.shape[2:], xbc.dtype)
@@ -76,7 +81,13 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
     full = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, C)
     out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
     out = jax.nn.silu(out + b)
-    new_state = full[:, -(K - 1):]
+    if lengths is None:
+        new_state = full[:, -(K - 1):]
+    else:
+        # full index i holds token position i-(K-1); tail = positions
+        # lengths-K+1 .. lengths-1  ->  full indices lengths .. lengths+K-2
+        idx = lengths[:, None] + jnp.arange(K - 1)[None, :]
+        new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
     return out, new_state
 
 
@@ -143,11 +154,20 @@ def ssd_block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
     h = rmsnorm(x, p["ln"], cfg.rms_eps)
     z, xbc, dt = _split_proj(cfg, linear(h, p["w_in"], cfg))
     conv_state = cache["conv"] if cache is not None else None
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    prompt_lengths = (ctx.get("prompt_lengths")
+                      if cache is None and ctx.get("collect_cache") else None)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state,
+                                 lengths=prompt_lengths)
     xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
     B_, S_ = x.shape[0], x.shape[1]
     xh = xs.reshape(B_, S_, H, P)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    valid = ctx.get("valid")
+    if cache is None and valid is not None:
+        # bucket-padded prefill: dt=0 makes a pad step the identity update
+        # (decay exp(0)=1, contribution dt*B*x = 0), so the collected final
+        # state is exactly the state after the last real token.
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (H,) negative
 
     if cache is not None:

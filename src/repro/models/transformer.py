@@ -139,16 +139,19 @@ def _self_attention(p: dict, h: jax.Array, cfg: ModelConfig, ctx: dict,
     return out, new_cache
 
 
-def _ffn(p: dict, h: jax.Array, cfg: ModelConfig):
+def _ffn(p: dict, h: jax.Array, cfg: ModelConfig, ctx: Optional[dict] = None):
     """Routed-MoE or dense FFN, honoring the parallel context."""
     if "moe" in p:
         from repro.parallel import context as pctx
         c = pctx.get()
         if c.ep_enabled:
+            # EP path is train-only; bucketed-prefill pad masking (ctx
+            # "valid") is not threaded through the two-hop dispatch.
             from repro.parallel import ep
             y, rr, drop = ep.moe_ffn_sharded(p["moe"], h, cfg, c)
         else:
-            y, rr, drop = moe_mod.moe_ffn(p["moe"], h, cfg)
+            y, rr, drop = moe_mod.moe_ffn(
+                p["moe"], h, cfg, valid=(ctx or {}).get("valid"))
         return y, {"aux_loss": rr.aux_loss, "load": rr.load, "drop": drop}
     return Lyr.mlp(p["mlp"], h, cfg), {}
 
@@ -160,7 +163,7 @@ def block_apply(p: dict, x: jax.Array, cfg: ModelConfig, ctx: dict,
                                    Lyr.rmsnorm(x, p["ln1"], cfg.rms_eps),
                                    cfg, ctx, cache)
     x = x + h
-    f, stats = _ffn(p, Lyr.rmsnorm(x, p["ln2"], cfg.rms_eps), cfg)
+    f, stats = _ffn(p, Lyr.rmsnorm(x, p["ln2"], cfg.rms_eps), cfg, ctx)
     return x + f, cache_out, stats
 
 

@@ -6,6 +6,11 @@ split: a ``PrefillPool`` (throughput-optimized, big batches, large EP) and
 a ``DecodePool`` (latency-optimized) connected by a cache-handoff queue —
 the KV-cache transfer the paper's §4.5 flags as a PCIe contention source.
 
+Both pools ride the fused serving entry points: prefill goes through the
+decode engine's bucketed jitted prefill (one compile per power-of-two
+prompt bucket), admission through the jitted donated cache splice, and
+decode through the fused k-step ``decode_loop`` chunks.
+
 Handoff bytes are tracked per request so the benchmark can reproduce the
 paper's KV-transfer bandwidth discussion.
 """
@@ -13,13 +18,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serve.engine import Request, ServeEngine, _splice
+from repro.serve.engine import Request, ServeEngine
 
 
 def cache_nbytes(cache) -> int:
@@ -30,7 +34,7 @@ def cache_nbytes(cache) -> int:
 @dataclasses.dataclass
 class Handoff:
     req: Request
-    cache1: object        # batch-1 cache pytree from prefill
+    cache1: object        # batch-1, max_len-slot cache pytree from prefill
     first_token: int
     nbytes: int
 
@@ -41,13 +45,16 @@ class Disaggregator:
 
     def __init__(self, cfg: ModelConfig, params=None, decode_slots: int = 4,
                  max_len: int = 128, prefill_ep: int = 32,
-                 decode_ep: int = 128, use_mtp: bool = False):
+                 decode_ep: int = 128, use_mtp: bool = False,
+                 chunk: int = 8, temperature: float = 0.0, top_k: int = 0):
         # one parameter set, two "deployments" (EP sizes are modeled for
         # the perf benchmarks; compute here is the same process)
         self.prefill_ep = prefill_ep
         self.decode_ep = decode_ep
         self.decode = ServeEngine(cfg, params=params, slots=decode_slots,
-                                  max_len=max_len, use_mtp=use_mtp)
+                                  max_len=max_len, use_mtp=use_mtp,
+                                  chunk=chunk, temperature=temperature,
+                                  top_k=top_k)
         self.params = self.decode.params
         self.model = self.decode.model
         self.queue: Deque[Handoff] = collections.deque()
@@ -55,27 +62,15 @@ class Disaggregator:
 
     def submit(self, req: Request, extras: Optional[Dict] = None):
         """Run prefill (prefill pool) and queue the cache for decode."""
-        toks = jax.numpy.asarray(req.prompt, jax.numpy.int32)[None]
-        batch = {"tokens": toks}
-        if extras:
-            batch.update(extras)
-        logits, cache1 = self.model.prefill(
-            self.params, batch,
-            extra_slots=self.decode.max_len - len(req.prompt))
-        first = int(jax.numpy.argmax(logits[0, -1]))
-        nbytes = cache_nbytes(cache1)
-        self.queue.append(Handoff(req, cache1, first, nbytes))
+        first, cache1 = self.decode.prefill_request(req, extras)
+        self.queue.append(Handoff(req, cache1, first, cache_nbytes(cache1)))
 
     def admit(self):
         """Move queued prefilled requests into free decode slots."""
         while self.queue and self.decode.free_slots():
             h = self.queue.popleft()
             slot = self.decode.free_slots()[0]
-            h.req.out.append(h.first_token)
-            self.decode.cache = _splice(self.decode.cache, h.cache1, slot)
-            self.decode.positions[slot] = len(h.req.prompt)
-            self.decode.active[slot] = h.req
-            self.decode.stats["tokens"] += 1
+            self.decode.admit_prefilled(h.req, h.first_token, h.cache1, slot)
             self.handoff_bytes += h.nbytes
 
     def step(self):

@@ -1,15 +1,24 @@
 """Batched serving engine: slot-based continuous batching over the decode
-cache, greedy/temperature sampling, EOS/max-len handling.
+cache, with the entire steady-state hot path fused on device.
 
-The decode step is the paper's §2.3.2 workload: one token per active slot
-against the cache (latent cache for MLA archs, ring KV for GQA, recurrent
-state for SSM/hybrid). Throughput model and EP interplay live in
-``network/perfmodel``; disaggregation in ``serve/disagg``.
+The decode step is the paper's §2.3.2 workload: memory-bound, TPOT- and
+dispatch-latency-dominated. The engine therefore runs decode as **fused
+k-step chunks** (``Model.decode_loop``: one ``lax.scan`` covering model
+step, sampling, EOS/max-len masking, and the MTP draft) — one host-device
+round-trip per ``chunk`` tokens per slot instead of ≥3 per token. Prefill
+is jitted once per power-of-two **length bucket** (pad-masked prompts), and
+slot admission splices the prefilled cache into the batch cache with a
+single jitted ``dynamic_update_slice`` per leaf (donated, so the multi-GB
+cache updates in place on accelerators). See docs/serving.md.
+
+Throughput model and EP interplay live in ``network/perfmodel``;
+disaggregation in ``serve/disagg``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,29 +27,74 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.api import Model, build_model
 
+# Smallest prefill bucket: prompts shorter than this share one compile.
+MIN_BUCKET = 8
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray           # (S,) int32
-    max_new: int = 16
+    max_new: int = 16            # new tokens after the prompt (the
+                                 # prefill-produced first token counts)
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def bucket_length(length: int, max_len: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Next power-of-two bucket for a prompt length, capped at ``max_len``."""
+    if length > max_len:
+        raise ValueError(f"prompt length {length} exceeds max_len {max_len}")
+    b = min_bucket
+    while b < length:
+        b *= 2
+    return min(b, max_len)
+
+
+def _splice(batch_cache, one_cache, slot, axes):
+    """Write a batch-1 cache pytree into slot ``slot`` of the batch cache.
+
+    ``axes`` is the model-declared batch-axis pytree
+    (``Model.cache_batch_axes``); each leaf is one
+    ``lax.dynamic_update_slice`` at that axis — no Python shape scanning,
+    and ``slot`` stays a traced scalar so one compile serves every slot.
+    Length axes shorter than the batch buffer are padded statically
+    (positions with -1 so decode masks them out, values with 0).
+    """
+    def f(big, small, ax):
+        if small.shape[ax] not in (1, big.shape[ax]):
+            raise ValueError(
+                f"_splice: prefill leaf batch axis {ax} has size "
+                f"{small.shape[ax]}; expected 1 or {big.shape[ax]} "
+                f"(shapes {small.shape} vs {big.shape})")
+        widths = [(0, 0) if i == ax else (0, big.shape[i] - small.shape[i])
+                  for i in range(big.ndim)]
+        if any(w != (0, 0) for w in widths):
+            cval = -1 if jnp.issubdtype(small.dtype, jnp.integer) else 0
+            small = jnp.pad(small, widths, constant_values=cval)
+        starts = tuple(slot if i == ax else 0 for i in range(big.ndim))
+        return jax.lax.dynamic_update_slice(
+            big, small.astype(big.dtype), starts)
+
+    return jax.tree.map(f, batch_cache, one_cache, axes)
+
+
 class ServeEngine:
     """Fixed-slot batch engine (continuous batching-lite).
 
-    All slots share one cache pytree of capacity ``max_len``; prefill runs
-    per-request (batch 1) and writes into the slot; decode steps run the
-    whole batch. This mirrors production decode pods where batch occupancy
-    changes per step but shapes stay static (XLA-friendly).
+    All slots share one cache pytree of capacity ``max_len``. ``step()`` is
+    a thin host driver: it refills free slots from the pending queue
+    (bucketed jitted prefill + jitted splice admission), then launches one
+    fused ``chunk``-step decode dispatch and syncs the emitted tokens back
+    in a single transfer. Slot occupancy changes per chunk but every device
+    shape is static (XLA-friendly), mirroring production decode pods.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, slots: int = 4,
                  max_len: int = 128, seed: int = 0,
-                 use_mtp: bool = False):
+                 use_mtp: bool = False, chunk: int = 8,
+                 temperature: float = 0.0, top_k: int = 0):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = (params if params is not None
@@ -48,135 +102,215 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.use_mtp = use_mtp and cfg.mtp is not None
+        self.chunk = chunk
+        self.temperature = temperature
+        self.top_k = top_k
         self.cache = self.model.init_cache(slots, max_len)
-        self.positions = np.zeros((slots,), np.int64)   # next position
+        # host mirrors of the on-device per-slot state (int32: jnp.asarray
+        # would silently downcast int64 under x64-disabled jax)
+        self.positions = np.zeros((slots,), np.int32)   # next position
+        self._tokens = np.zeros((slots,), np.int32)     # last emitted token
+        self._left = np.zeros((slots,), np.int32)       # decode budget
+        self._eos = np.full((slots,), -1, np.int32)
+        self._draft = np.full((slots,), -1, np.int32)
         self.active: List[Optional[Request]] = [None] * slots
-        self._decode = jax.jit(self.model.decode_step)
+        self.pending: Deque[Tuple[Request, Optional[Dict]]] = \
+            collections.deque()
+        self._rng = jax.random.PRNGKey(seed + 1)
         self.stats = {"steps": 0, "tokens": 0, "accepted_drafts": 0,
-                      "drafts": 0}
-        self._drafts: List[Optional[int]] = [None] * slots
+                      "drafts": 0, "dispatches": 0, "prefills": 0,
+                      "splices": 0, "first_tokens": 0}
+        # jit caches + trace counters (tests assert retrace bounds)
+        self._prefill_fns: Dict[int, Any] = {}
+        self._prefill_traces = 0
+        self._splice_traces = 0
+        self._decode_traces = 0
+        donate = jax.default_backend() != "cpu"
+        axes = self.model.cache_batch_axes(slots, max_len)
+
+        def splice(big, small, slot):
+            self._splice_traces += 1
+            return _splice(big, small, slot, axes)
+
+        self._splice_fn = jax.jit(
+            splice, donate_argnums=(0,) if donate else ())
+
+        def decode_chunk(params, cache, state):
+            self._decode_traces += 1
+            return self.model.decode_loop(
+                params, cache, state, self.chunk,
+                temperature=self.temperature, top_k=self.top_k,
+                use_mtp=self.use_mtp)
+
+        self._decode_fn = jax.jit(
+            decode_chunk, donate_argnums=(1, 2) if donate else ())
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def compiled_prefill_buckets(self) -> List[int]:
+        """Sorted bucket lengths with a compiled prefill program."""
+        return sorted(self._prefill_fns)
+
+    @property
+    def trace_counts(self) -> Dict[str, int]:
+        """How many times each jitted entry point has (re)traced — the
+        compile-count contract: prefill ≤ #buckets, splice = 1,
+        decode = 1. Benchmarks/tests assert against this, not internals."""
+        return {"prefill": self._prefill_traces,
+                "splice": self._splice_traces,
+                "decode": self._decode_traces}
+
+    # -- prefill ------------------------------------------------------------
+    def _get_prefill(self, bucket: int):
+        """Jitted prefill for one static (bucket, extra_slots) shape."""
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            extra = self.max_len - bucket
+
+            def prefill(params, tokens, lengths, extras):
+                self._prefill_traces += 1
+                batch = {"tokens": tokens}
+                batch.update(extras)
+                return self.model.prefill(params, batch, extra_slots=extra,
+                                          lengths=lengths)
+
+            fn = jax.jit(prefill)
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    def prefill_request(self, req: Request, extras: Optional[Dict] = None):
+        """Run bucketed prefill for one request; returns (first_token,
+        cache1). The cache already has ``max_len`` context slots
+        (extra_slots is derived from the static bucket), so admission is a
+        pure splice. Used by admission here and by the disaggregated
+        prefill pool."""
+        L = len(req.prompt)
+        bucket = bucket_length(L, self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        lengths = np.asarray([L], np.int32)
+        self.stats["dispatches"] += 1
+        self.stats["prefills"] += 1
+        logits, cache1 = self._get_prefill(bucket)(
+            self.params, jnp.asarray(toks), jnp.asarray(lengths),
+            extras or {})
+        # first token follows the same sampling policy as the fused loop
+        from repro.models.api import sample_logits
+        self._rng, sub = jax.random.split(self._rng)
+        first = int(sample_logits(logits[0, -1], sub, self.temperature,
+                                  self.top_k))
+        return first, cache1
 
     # -- admission ----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
+    def submit(self, req: Request, extras: Optional[Dict] = None):
+        """Queue a request; ``step()`` admits it when a slot frees up."""
+        self.pending.append((req, extras))
+
     def add_request(self, req: Request, extras: Optional[Dict] = None):
+        """Prefill + admit immediately. Raises when no slot is free."""
         free = self.free_slots()
         if not free:
             raise RuntimeError(
                 f"no free slots: all {self.slots} slots are occupied; "
                 "call step() until a request completes before admitting "
-                "more (see free_slots())")
-        slot = free[0]
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        batch = {"tokens": toks}
-        if extras:
-            batch.update(extras)
-        logits, cache1 = self.model.prefill(
-            self.params, batch, extra_slots=self.max_len - len(req.prompt))
-        first = int(jnp.argmax(logits[0, -1]))
-        req.out.append(first)
-        # splice the single-request cache into the batch cache at ``slot``
-        self.cache = _splice(self.cache, cache1, slot)
-        self.positions[slot] = len(req.prompt)
-        self.active[slot] = req
-        self.stats["tokens"] += 1
+                "more, or use submit() to queue (see free_slots())")
+        first, cache1 = self.prefill_request(req, extras)
+        self.admit_prefilled(req, first, cache1, free[0])
         return first
 
+    def admit_prefilled(self, req: Request, first: int, cache1,
+                        slot: int):
+        """Admit an already-prefilled request into ``slot``: one donated
+        jitted splice of the prefill cache plus host-mirror bookkeeping.
+        ``max_new`` counts new tokens after the prompt, so the first token
+        (or an immediate EOS) can complete the request with zero decode
+        steps — in that case the splice is skipped entirely."""
+        req.out.append(first)
+        self.stats["tokens"] += 1
+        self.stats["first_tokens"] += 1
+        if req.max_new <= 1 or (req.eos is not None and first == req.eos):
+            req.done = True
+            return
+        self.stats["dispatches"] += 1
+        self.stats["splices"] += 1
+        self.cache = self._splice_fn(self.cache, cache1, slot)
+        self.positions[slot] = len(req.prompt)
+        self._tokens[slot] = first
+        self._left[slot] = req.max_new - 1
+        self._eos[slot] = -1 if req.eos is None else req.eos
+        self._draft[slot] = -1
+        self.active[slot] = req
+
+    def _admit_pending(self):
+        while self.pending and self.free_slots():
+            req, extras = self.pending.popleft()
+            first, cache1 = self.prefill_request(req, extras)
+            self.admit_prefilled(req, first, cache1, self.free_slots()[0])
+
     # -- decode -------------------------------------------------------------
+    def _device_state(self) -> Dict[str, Any]:
+        # built field-for-field like Model.init_decode_state (the canonical
+        # structure; pinned by a test) without paying its allocations —
+        # donation invalidates reused buffers, so the chunk counters must
+        # be fresh scalars each step anyway
+        return dict(
+            tokens=jnp.asarray(self._tokens),
+            positions=jnp.asarray(self.positions),
+            active=jnp.asarray(np.array([r is not None
+                                         for r in self.active])),
+            left=jnp.asarray(self._left),
+            eos=jnp.asarray(self._eos),
+            draft=jnp.asarray(self._draft),
+            rng=self._rng,
+            drafts=jnp.zeros((), jnp.int32),
+            accepted=jnp.zeros((), jnp.int32),
+        )
+
     def step(self):
-        """One batched decode step over all active slots."""
+        """Refill slots from the pending queue, then run one fused
+        ``chunk``-step decode dispatch over all slots."""
+        self._admit_pending()
         if not any(r is not None for r in self.active):
             return
-        toks = np.zeros((self.slots, 1), np.int32)
-        pos = np.zeros((self.slots, 1), np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None:
-                toks[i, 0] = r.out[-1]
-                pos[i, 0] = self.positions[i]
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        self.stats["steps"] += 1
+        self.stats["dispatches"] += 1
+        toks, emitted, self.cache, st = self._decode_fn(
+            self.params, self.cache, self._device_state())
+        self._rng = st["rng"]
+        # single host sync per chunk: emitted tokens + updated slot state
+        toks, emitted, host = jax.device_get(
+            (toks, emitted, {k: st[k] for k in
+                             ("tokens", "positions", "active", "left",
+                              "draft", "drafts", "accepted")}))
+        self.stats["steps"] += int(emitted.any(axis=0).sum())
+        self.stats["drafts"] += int(host["drafts"])
+        self.stats["accepted_drafts"] += int(host["accepted"])
+        # copy: device_get arrays are read-only, mirrors are written on admit
+        self._tokens = np.array(host["tokens"])
+        self.positions = np.array(host["positions"])
+        self._left = np.array(host["left"])
+        self._draft = np.array(host["draft"])
         for i, r in enumerate(self.active):
             if r is None:
                 continue
-            tok = int(nxt[i])
-            # MTP speculative accounting: did last step's draft match?
-            if self.use_mtp and self._drafts[i] is not None:
-                self.stats["drafts"] += 1
-                if self._drafts[i] == tok:
-                    self.stats["accepted_drafts"] += 1
-            r.out.append(tok)
-            self.stats["tokens"] += 1
-            self.positions[i] += 1
-            if (r.eos is not None and tok == r.eos) or \
-                    len(r.out) >= r.max_new:
+            new = toks[i, emitted[i]]
+            r.out.extend(int(t) for t in new)
+            self.stats["tokens"] += int(new.size)
+            if not host["active"][i]:
                 r.done = True
                 self.active[i] = None
-                self._drafts[i] = None
-        if self.use_mtp:
-            self._draft_next(jnp.asarray(nxt))
-
-    def _draft_next(self, last_tokens):
-        """MTP module drafts each slot's token-after-next (paper §2.3.3)."""
-        from repro.core import mtp as mtp_mod
-        from repro.models import transformer as tfm
-        cfg = self.cfg
-        h = self.cache["mtp_h"]                       # (B, 1, d)
-        emb = self.model._embed(self.params, last_tokens[:, None])
-        pos = jnp.asarray(self.positions, jnp.int32)[:, None]
-        logits = mtp_mod.mtp_draft(
-            self.params["mtp"], h, emb, cfg=cfg, positions=pos,
-            block_apply=lambda p, x, positions: tfm.block_apply(
-                p, x, cfg, dict(positions=positions, causal=True), None)[0],
-            unemb_fn=lambda hh: self.model._unembed(self.params, hh))
-        drafts = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        for i, r in enumerate(self.active):
-            self._drafts[i] = int(drafts[i]) if r is not None else None
 
     def run_until_done(self, max_steps: int = 1000):
+        """Drive chunks until every submitted/admitted request completes.
+        ``max_steps`` bounds the number of fused chunks."""
         for _ in range(max_steps):
-            if not any(r is not None for r in self.active):
+            if not self.pending and not any(
+                    r is not None for r in self.active):
                 break
             self.step()
 
     def acceptance_rate(self) -> float:
         d = self.stats["drafts"]
         return self.stats["accepted_drafts"] / d if d else 0.0
-
-
-def _splice(batch_cache, one_cache, slot: int):
-    """Write a batch-1 cache pytree into slot ``slot`` of the batch cache.
-    Handles leaves whose batch dim position differs by matching shapes."""
-    def f(big, small):
-        if big is None:
-            return None
-        if big.shape == small.shape:
-            # single-slot engine: the prefill cache IS the batch cache
-            return small.astype(big.dtype)
-        # find the batch axis: the axis where small has size 1 and big has
-        # size  == slots, scanning from axis 0
-        for ax in range(big.ndim):
-            if small.shape[ax] == 1 and big.shape[ax] != small.shape[ax]:
-                idx = [slice(None)] * big.ndim
-                idx[ax] = slice(slot, slot + 1)
-                pad = small
-                # pad small's cache-length axis up to big's if needed
-                for a2 in range(big.ndim):
-                    if a2 != ax and pad.shape[a2] != big.shape[a2]:
-                        widths = [(0, 0)] * big.ndim
-                        widths[a2] = (0, big.shape[a2] - pad.shape[a2])
-                        cval = -1 if jnp.issubdtype(pad.dtype, jnp.integer) \
-                            else 0
-                        pad = jnp.pad(pad, widths, constant_values=cval)
-                return big.at[tuple(idx)].set(pad.astype(big.dtype))
-        # No batch axis found and shapes differ (the equal-shape case
-        # returned above): this leaf cannot be spliced — dropping it
-        # silently would corrupt the batch cache, so fail loudly.
-        raise ValueError(
-            f"_splice: cache leaf shapes are incompatible — batch cache "
-            f"{big.shape} vs prefill cache {small.shape}: no axis where "
-            f"the prefill leaf has size 1 and the batch leaf differs")
-    return jax.tree.map(f, batch_cache, one_cache)

@@ -42,3 +42,14 @@ class SpecDecodeModel:
 def paper_claim() -> SpecDecodeModel:
     """The paper's reported operating point: 80–90 % acceptance -> 1.8x."""
     return SpecDecodeModel(acceptance=0.85)
+
+
+def measured(engine) -> SpecDecodeModel:
+    """Build the speedup model from a ``ServeEngine`` run's on-device
+    acceptance counters (the fused ``decode_loop`` counts draft hits per
+    chunk; ``engine.acceptance_rate()`` aggregates them host-side)."""
+    cfg = engine.cfg
+    return SpecDecodeModel(
+        acceptance=engine.acceptance_rate(),
+        mtp_layers=cfg.mtp.num_modules if cfg.mtp else 1,
+        model_layers=cfg.num_layers)

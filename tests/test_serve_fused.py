@@ -1,0 +1,298 @@
+"""Fused serving hot path: k-step decode_loop parity, prefill bucketing
+compile bounds, jitted splice admission, max_new semantics, MTP-in-loop
+acceptance parity (ISSUE 2 tentpole)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.serve.engine import Request, ServeEngine, bucket_length
+
+
+@pytest.fixture(scope="module")
+def dsv3_cfg():
+    cfg = smoke_config(get_config("deepseek-v3-671b"))
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+@pytest.fixture(scope="module")
+def gqa_cfg():
+    return smoke_config(get_config("qwen3-14b"))
+
+
+def _reference_decode(model, params, cache, state, k, use_mtp=False):
+    """The pre-fused host loop: one eager decode_step dispatch per token,
+    greedy argmax on host, per-slot bookkeeping in Python. Returns
+    (per-slot token lists, drafts, accepted)."""
+    from repro.core import mtp as mtp_mod
+    tok = np.array(state["tokens"])
+    pos = np.array(state["positions"])
+    active = np.array(state["active"])
+    left = np.array(state["left"])
+    draft = np.array(state["draft"])
+    B = tok.shape[0]
+    outs = [[] for _ in range(B)]
+    drafts = accepted = 0
+    for _ in range(k):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray(tok[:, None]),
+            jnp.asarray(pos[:, None]))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i in range(B):
+            if not active[i]:
+                continue
+            if draft[i] >= 0:
+                drafts += 1
+                accepted += int(draft[i] == nxt[i])
+            outs[i].append(int(nxt[i]))
+            tok[i] = nxt[i]
+            pos[i] += 1
+            left[i] -= 1
+            if left[i] <= 0:
+                active[i] = False
+        if use_mtp:
+            d = np.asarray(mtp_mod.mtp_draft_tokens(
+                params, cache, model.cfg, jnp.asarray(tok),
+                jnp.asarray(pos),
+                embed_fn=lambda t: model._embed(params, t),
+                unembed_fn=lambda hh: model._unembed(params, hh)))
+            draft = np.where(active, d, -1)
+    return outs, drafts, accepted
+
+
+class TestFusedDecodeParity:
+    def test_fused_matches_per_step_greedy(self, dsv3_cfg):
+        """Token-for-token: k fused scan steps == k individual decode_step
+        dispatches with host-side argmax (the old engine loop)."""
+        k = 6
+        eng = ServeEngine(dsv3_cfg, slots=2, max_len=32, seed=3, chunk=k)
+        eng.add_request(Request(0, np.arange(5) % dsv3_cfg.vocab_size,
+                                max_new=32))
+        eng.add_request(Request(1, (np.arange(7) * 3) % dsv3_cfg.vocab_size,
+                                max_new=32))
+        cache0, state0 = eng.cache, eng._device_state()
+        ref, _, _ = _reference_decode(eng.model, eng.params, cache0,
+                                      state0, k)
+        toks, emitted, _, _ = jax.jit(
+            lambda p, c, s: eng.model.decode_loop(p, c, s, k))(
+                eng.params, cache0, state0)
+        toks, emitted = np.asarray(toks), np.asarray(emitted)
+        for i in range(2):
+            assert list(toks[i, emitted[i]]) == ref[i], i
+
+    def test_engine_chunks_match_reference(self, dsv3_cfg):
+        """End-to-end: engine with chunked fused decode produces the same
+        completion as the per-step reference."""
+        k = 4
+        eng = ServeEngine(dsv3_cfg, slots=2, max_len=32, seed=5, chunk=k)
+        r0 = Request(0, np.arange(6) % dsv3_cfg.vocab_size, max_new=9)
+        eng.add_request(r0)
+        ref, _, _ = _reference_decode(eng.model, eng.params, eng.cache,
+                                      eng._device_state(), 12)
+        eng.run_until_done()
+        assert r0.done
+        assert r0.out[1:] == ref[0][:r0.max_new - 1]
+
+    def test_mtp_fused_acceptance_matches_reference(self, dsv3_cfg):
+        """MTP drafting + acceptance counting inside the fused loop matches
+        the per-step host implementation on a fixed seed."""
+        k = 6
+        eng = ServeEngine(dsv3_cfg, slots=2, max_len=32, seed=7, chunk=k,
+                          use_mtp=True)
+        eng.add_request(Request(0, np.arange(5) % dsv3_cfg.vocab_size,
+                                max_new=32))
+        eng.add_request(Request(1, (np.arange(9) * 2) % dsv3_cfg.vocab_size,
+                                max_new=32))
+        cache0, state0 = eng.cache, eng._device_state()
+        ref, ref_drafts, ref_accepted = _reference_decode(
+            eng.model, eng.params, cache0, state0, k, use_mtp=True)
+        assert ref_drafts > 0
+        eng.step()
+        assert eng.stats["drafts"] == ref_drafts
+        assert eng.stats["accepted_drafts"] == ref_accepted
+        for i, r in enumerate([eng.active[0], eng.active[1]]):
+            assert r is not None
+            assert r.out[1:] == ref[i]
+        from repro.serve.speculative import measured
+        m = measured(eng)
+        assert m.acceptance == eng.acceptance_rate()
+        assert m.model_layers == dsv3_cfg.num_layers
+        assert m.tps_multiplier > 0
+
+    def test_sampled_decode_runs(self, gqa_cfg):
+        """Temperature/top-k sampling path: on-device PRNG, deterministic
+        for a fixed seed, all sampled ids in-vocab."""
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=32, seed=11, chunk=4,
+                          temperature=0.8, top_k=8)
+        r = Request(0, np.arange(5), max_new=8)
+        eng.add_request(r)
+        eng.run_until_done()
+        assert r.done and len(r.out) == 8
+        assert all(0 <= t < gqa_cfg.vocab_size for t in r.out)
+        eng2 = ServeEngine(gqa_cfg, params=eng.params, slots=2, max_len=32,
+                           seed=11, chunk=4, temperature=0.8, top_k=8)
+        r2 = Request(0, np.arange(5), max_new=8)
+        eng2.add_request(r2)
+        eng2.run_until_done()
+        assert r2.out == r.out
+
+
+class TestPrefillBucketing:
+    def test_bucket_length(self):
+        assert bucket_length(1, 64) == 8
+        assert bucket_length(8, 64) == 8
+        assert bucket_length(9, 64) == 16
+        assert bucket_length(33, 48) == 48   # capped at max_len
+        with pytest.raises(ValueError):
+            bucket_length(65, 64)
+
+    def test_retraces_bounded_by_buckets(self, gqa_cfg):
+        """16 distinct prompt lengths must compile prefill at most once per
+        power-of-two bucket (trace counter, not wall clock)."""
+        eng = ServeEngine(gqa_cfg, slots=1, max_len=32, chunk=2)
+        for L in range(1, 17):
+            r = Request(L, np.arange(L) % gqa_cfg.vocab_size, max_new=2)
+            eng.add_request(r)
+            eng.run_until_done()
+            assert r.done
+        buckets = {bucket_length(L, 32) for L in range(1, 17)}
+        assert buckets == {8, 16}
+        assert eng.trace_counts["prefill"] <= len(buckets)
+        assert set(eng.compiled_prefill_buckets) == buckets
+
+    def test_bucketed_prefill_matches_exact(self, dsv3_cfg):
+        """Pad-masked bucketed prefill == exact-length prefill: same last
+        logits, same cache (pad slots zeroed with pos=-1)."""
+        m = ServeEngine(dsv3_cfg, slots=1, max_len=32).model
+        params = m.init(jax.random.PRNGKey(0))
+        L, S = 5, 8
+        toks = (np.arange(L) * 7 % dsv3_cfg.vocab_size).astype(np.int32)
+        padded = np.zeros((1, S), np.int32)
+        padded[0, :L] = toks
+        lg_e, c_e = m.prefill(params, {"tokens": jnp.asarray(toks[None])},
+                              extra_slots=32 - L)
+        lg_b, c_b = m.prefill(params, {"tokens": jnp.asarray(padded)},
+                              extra_slots=32 - S,
+                              lengths=jnp.asarray([L], jnp.int32))
+        assert float(jnp.abs(lg_e - lg_b).max()) < 1e-5
+        for a, b in zip(jax.tree.leaves(c_e), jax.tree.leaves(c_b)):
+            assert a.shape == b.shape
+            assert float(jnp.abs(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32)).max()) < 1e-5
+
+    def test_bucketed_prefill_matches_exact_tight_moe_capacity(self):
+        """Pads must not steal MoE capacity slots from real tokens: at the
+        production capacity_factor (1.25, tight at smoke scale) bucketed
+        and exact prefill still agree — pad assignments are demoted below
+        every real token and the keep threshold is the exact-length
+        capacity."""
+        cfg = smoke_config(get_config("deepseek-v3-671b"))  # cf = 1.25
+        m = ServeEngine(cfg, slots=1, max_len=32).model
+        params = m.init(jax.random.PRNGKey(2))
+        L, S = 5, 16
+        toks = (np.arange(L) * 11 % cfg.vocab_size).astype(np.int32)
+        padded = np.zeros((1, S), np.int32)
+        padded[0, :L] = toks
+        lg_e, c_e = m.prefill(params, {"tokens": jnp.asarray(toks[None])},
+                              extra_slots=32 - L)
+        lg_b, c_b = m.prefill(params, {"tokens": jnp.asarray(padded)},
+                              extra_slots=32 - S,
+                              lengths=jnp.asarray([L], jnp.int32))
+        assert float(jnp.abs(lg_e - lg_b).max()) < 1e-5
+        for a, b in zip(jax.tree.leaves(c_e), jax.tree.leaves(c_b)):
+            assert float(jnp.abs(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32)).max()) < 1e-5
+
+    def test_device_state_matches_canonical_structure(self, gqa_cfg):
+        """The engine's hand-built chunk state must stay field-for-field in
+        sync with Model.init_decode_state (the decode_loop contract)."""
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=32)
+        canon = eng.model.init_decode_state(2)
+        st = eng._device_state()
+        assert set(st) == set(canon)
+        for k in canon:
+            assert st[k].shape == canon[k].shape, k
+            assert st[k].dtype == canon[k].dtype, k
+
+
+class TestAdmission:
+    def test_splice_compiles_once_across_slots(self, gqa_cfg):
+        """Slot admission is one jitted dynamic_update_slice program for
+        every slot index (slot stays a traced scalar)."""
+        eng = ServeEngine(gqa_cfg, slots=3, max_len=32, chunk=2)
+        for rid in range(6):
+            while not eng.free_slots():
+                eng.step()
+            eng.add_request(Request(rid, np.arange(4 + rid), max_new=3))
+        eng.run_until_done()
+        assert eng.stats["splices"] == 6
+        assert eng.trace_counts["splice"] == 1
+
+    def test_steady_state_one_dispatch_per_chunk(self, gqa_cfg):
+        """ISSUE 2 acceptance: steady-state decode is ≤ 1 host round-trip
+        per k generated tokens per slot (k = chunk = 8)."""
+        k = 8
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=64, chunk=k)
+        eng.add_request(Request(0, np.arange(5), max_new=64))
+        eng.add_request(Request(1, np.arange(6), max_new=64))
+        d0, t0 = eng.stats["dispatches"], eng.stats["tokens"]
+        for _ in range(3):
+            eng.step()
+        d1, t1 = eng.stats["dispatches"], eng.stats["tokens"]
+        assert d1 - d0 == 3                      # one dispatch per chunk
+        assert t1 - t0 == 3 * k * 2              # k tokens per slot per chunk
+        assert (d1 - d0) / ((t1 - t0) / 2) <= 1.0 / k
+
+
+class TestMaxNewSemantics:
+    """max_new = new tokens after the prompt; the prefill-produced first
+    token is the first of them (regression for the admission off-by-one
+    that made max_new=1 generate two tokens)."""
+
+    def test_exact_token_budget(self, gqa_cfg):
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=32, chunk=4)
+        for max_new in (1, 2, 5):
+            r = Request(max_new, np.arange(5), max_new=max_new)
+            eng.add_request(r)
+            eng.run_until_done()
+            assert r.done
+            assert len(r.out) == max_new, (max_new, r.out)
+
+    def test_max_new_one_never_occupies_a_slot(self, gqa_cfg):
+        eng = ServeEngine(gqa_cfg, slots=1, max_len=32, chunk=4)
+        r = Request(0, np.arange(5), max_new=1)
+        eng.add_request(r)
+        assert r.done and len(r.out) == 1
+        assert eng.free_slots() == [0]
+        assert eng.stats["splices"] == 0
+
+    def test_eos_on_first_token_completes_at_admission(self, gqa_cfg):
+        eng = ServeEngine(gqa_cfg, slots=1, max_len=32, chunk=4)
+        probe = Request(0, np.arange(5), max_new=4)
+        first = eng.add_request(probe)
+        eng.run_until_done()
+        r = Request(1, np.arange(5), max_new=4, eos=first)
+        eng.add_request(r)
+        assert r.done and r.out == [first]
+        assert eng.free_slots() == [0]
+
+    def test_eos_mid_decode_stops_slot(self, dsv3_cfg):
+        """EOS masking happens on device inside the fused chunk."""
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32, seed=3, chunk=8)
+        probe = Request(0, np.arange(5), max_new=8)
+        eng.add_request(probe)
+        eng.run_until_done()
+        assert len(probe.out) >= 3
+        eos = probe.out[2]
+        cut = probe.out.index(eos)        # first occurrence wins
+        eng2 = ServeEngine(dsv3_cfg, params=eng.params, slots=1, max_len=32,
+                           seed=3, chunk=8)
+        r = Request(1, np.arange(5), max_new=8, eos=eos)
+        eng2.add_request(r)
+        eng2.run_until_done()
+        assert r.done
+        assert r.out == probe.out[:cut + 1]
