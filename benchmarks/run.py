@@ -1,6 +1,8 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 # The serve_bench suite additionally writes BENCH_serve.json (tokens/s,
-# TTFT, dispatches/token for the fused serving engine).
+# TTFT, dispatches/token for the fused serving engine); train_bench
+# writes BENCH_train.json (meshed train step tokens/s + ep_flat-vs-
+# ep_dedup all-to-all wire bytes, measured in an 8-device subprocess).
 import sys
 
 sys.path.insert(0, "src")
@@ -9,6 +11,7 @@ sys.path.insert(0, "src")
 def main() -> None:
     from benchmarks import paper_tables as pt
     from benchmarks import serve_bench
+    from benchmarks import train_bench
 
     suites = [
         pt.table1_kv_cache,
@@ -21,6 +24,7 @@ def main() -> None:
         pt.mtp_bench,
         pt.ep_dedup_bytes,
         serve_bench.suite,
+        train_bench.suite,
     ]
     print("name,us_per_call,derived")
     for suite in suites:

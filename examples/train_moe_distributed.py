@@ -4,8 +4,11 @@ mesh with the paper's full technique stack:
 
   * expert parallelism with node-limited two-hop dedup dispatch (T3)
   * FP8 wire precision on dispatch, BF16 combine (T4/§2.3.2)
+  * dual anti-phase microbatch overlap in one scan body (T7/§2.3.1)
   * aux-loss-free router-bias balancing (T2)
-  * checkpoint/restart with a mid-run injected failure (robustness, §6.1)
+  * checkpoint/restart with a mid-run injected failure: the trainer
+    re-meshes onto the survivors — dp axis halves — and restores the
+    checkpoint re-sharded onto the smaller mesh (robustness, §6.1)
 
 Run:  PYTHONPATH=src python examples/train_moe_distributed.py [--steps 200]
 (spawns 8 CPU devices in-process)
@@ -64,13 +67,13 @@ def main():
                          ckpt_dir=d, ckpt_every=50,
                          sdc_check_every=75)
         inj = FailureInjector({args.steps // 2: "node"})
-        with pctx_mod.use(ctx):
-            tr = Trainer(cfg, tc, injector=inj, global_batch=args.batch,
-                         seq_len=args.seq)
-            out = tr.run(args.steps)
+        tr = Trainer(cfg, tc, injector=inj, global_batch=args.batch,
+                     seq_len=args.seq, ctx=ctx)
+        out = tr.run(args.steps)
         h = out["history"]
         print(f"steps: {out['final_step']}  restarts: {out['restarts']} "
-              f"(injected node failure recovered from checkpoint)")
+              f"(injected node failure recovered on survivor mesh "
+              f"{out['mesh_shape']})")
         print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}")
         print(f"router load (last step drop_frac): "
               f"{h[-1].get('blocks/drop_frac', 0):.4f}")

@@ -24,3 +24,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def dp_axes_for(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def survivor_mesh(mesh: Mesh) -> Mesh:
+    """Elastic re-mesh after a node failure (paper §6.1).
+
+    Halves the first data-parallel axis with size > 1 ("pod" before
+    "data"), keeping the model/EP axis intact so expert shards and weight
+    blocks stay divisible — training resumes on the survivors from the
+    last checkpoint with the batch re-sharded over the smaller DP degree.
+    Returns the same mesh when no DP axis can shrink (restart in place).
+    """
+    names = list(mesh.axis_names)
+    shape = [mesh.shape[a] for a in names]
+    for i, a in enumerate(names):
+        if a in ("pod", "data") and shape[i] > 1:
+            shape[i] //= 2
+            return make_mesh(tuple(shape), tuple(names))
+    return mesh

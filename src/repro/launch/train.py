@@ -26,7 +26,14 @@ def main():
                     help="force host device count (spawns CPU devices)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2x4 -> mesh (data=2, model=4) with EP MoE")
-    ap.add_argument("--moe-impl", default="ep_dedup")
+    ap.add_argument("--moe-impl", default="ep_dedup",
+                    help="local | ep_flat | ep_dedup (EP dispatch protocol"
+                         " used by the meshed train step)")
+    ap.add_argument("--wire", default="fp8",
+                    help="EP dispatch wire precision: fp8 | bf16 | fp32")
+    ap.add_argument("--microbatches", type=int, default=2, choices=(1, 2),
+                    help="2 = dual anti-phase microbatch overlap (paper"
+                         " §2.3.1); 1 = single-batch step")
     args = ap.parse_args()
 
     if args.devices:
@@ -49,19 +56,27 @@ def main():
         shape = tuple(int(x) for x in args.mesh.split("x"))
         mesh = make_mesh(shape, ("data", "model")[:len(shape)]
                          if len(shape) == 2 else ("pod", "data", "model"))
+        dp = (("data",) if len(shape) == 2 else ("pod", "data"))
         ctx = pctx_mod.ParallelCtx(
-            mesh=mesh, dp_axes=("data",),
-            moe_impl=args.moe_impl if cfg.moe else "local")
+            mesh=mesh, dp_axes=dp,
+            moe_impl=args.moe_impl if cfg.moe else "local",
+            wire=args.wire, microbatches=args.microbatches)
     tc = TrainConfig(peak_lr=args.lr, warmup=max(args.steps // 10, 1),
                      total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                      ckpt_every=max(args.steps // 4, 1))
-    with pctx_mod.use(ctx):
-        tr = Trainer(cfg, tc, global_batch=args.batch, seq_len=args.seq)
-        out = tr.run(args.steps)
+    # ctx is threaded explicitly: the step function is built from it
+    # (EP impl + wire + microbatch overlap), not from ambient globals
+    tr = Trainer(cfg, tc, global_batch=args.batch, seq_len=args.seq,
+                 ctx=ctx)
+    out = tr.run(args.steps)
     h = out["history"]
     print(f"[train] {args.arch}: step {out['final_step']}, "
           f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}, "
           f"restarts {out['restarts']}")
+    if args.mesh:
+        print(f"[train] mesh {out['mesh_shape']} moe_impl={args.moe_impl} "
+              f"wire={args.wire} microbatches={args.microbatches} "
+              f"straggler_events={len(out['straggler_events'])}")
 
 
 if __name__ == "__main__":

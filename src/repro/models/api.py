@@ -65,6 +65,19 @@ def _diff_barrier_bwd(_, g):
 _diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
 
 
+def apply_remat(step, policy: str):
+    """Wrap a scan step with the ctx's remat policy (none | full | dots).
+    Single source for the single-batch backbone and the dual-microbatch
+    scan (parallel/overlap), so the two paths can't diverge."""
+    if policy == "full":
+        return jax.checkpoint(step)
+    if policy == "dots":
+        return jax.checkpoint(
+            step,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return step
+
+
 def sample_logits(logits: jax.Array, key: jax.Array, temperature: float,
                   top_k: int = 0) -> jax.Array:
     """Greedy (temperature<=0) or temperature/top-k sampling over the last
@@ -362,11 +375,7 @@ class Model:
             h, nc, st = _apply_kind(seg, ps, h, cfg, ctx, cs)
             return shard_act(h), (nc, st)
 
-        if remat == "full":
-            step = jax.checkpoint(step)
-        elif remat == "dots":
-            step = jax.checkpoint(
-                step, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        step = apply_remat(step, remat)
 
         if cache is None:
             xs = (p, None)
@@ -402,13 +411,10 @@ class Model:
                 all_stats[seg.name] = st
         return x, new_caches, all_stats, ctx
 
-    def loss(self, params, batch, rng=None):
-        cfg = self.cfg
-        tokens, labels = batch["tokens"], batch["labels"]
-        B, S = tokens.shape
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        ctx = dict(positions=pos, causal=True)
-        h, _, stats, ctx = self._backbone(params, tokens, ctx, None, batch)
+    def _ce(self, params, h, labels):
+        """Mean CE of hidden states vs labels (-1 = pad). Returns
+        (loss, ntokens). Shared by ``loss`` and the dual-microbatch path
+        (parallel/overlap) so both optimize the identical objective."""
         logits = self._unembed(params, h)
         valid = labels >= 0
         lab = jnp.where(valid, labels, 0)
@@ -417,7 +423,37 @@ class Model:
                                  lab[..., None], axis=-1)[..., 0]
         ce = jnp.where(valid, lse - ll, 0.0)
         ntok = jnp.maximum(valid.sum(), 1)
-        loss = ce.sum() / ntok
+        return ce.sum() / ntok, ntok
+
+    def _mtp_loss(self, params, h, tokens, pos, ctx):
+        """MTP auxiliary loss given the backbone's final hidden states."""
+        cfg = self.cfg
+        return mtp_mod.mtp_losses(
+            params["mtp"], h, tokens,
+            emb_fn=lambda t: self._embed(params, t),
+            unemb_fn=lambda hh: self._unembed(params, hh),
+            cfg=cfg, positions=pos,
+            block_apply=lambda p, x, positions: tfm.block_apply(
+                p, x, cfg, dict(ctx, positions=positions), None)[0])
+
+    def loss(self, params, batch, rng=None, pctx=None):
+        """Teacher-forcing loss. ``pctx``: optional ``ParallelCtx`` scoped
+        for the duration of the trace (the ctx-threaded variant the meshed
+        train step uses, instead of relying on the ambient global ctx)."""
+        if pctx is not None:
+            from repro.parallel import context as pctx_mod
+            with pctx_mod.use(pctx):
+                return self._loss_inner(params, batch)
+        return self._loss_inner(params, batch)
+
+    def _loss_inner(self, params, batch):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        ctx = dict(positions=pos, causal=True)
+        h, _, stats, ctx = self._backbone(params, tokens, ctx, None, batch)
+        loss, ntok = self._ce(params, h, labels)
         metrics = {"ce": loss, "ntokens": ntok}
         # MoE diagnostics
         aux = 0.0
@@ -428,16 +464,27 @@ class Model:
                 metrics[f"{segname}/load_layers"] = st["load"]   # (n, E)
         metrics["aux_loss"] = aux
         if cfg.mtp:
-            mtp_l = mtp_mod.mtp_losses(
-                params["mtp"], h, tokens,
-                emb_fn=lambda t: self._embed(params, t),
-                unemb_fn=lambda hh: self._unembed(params, hh),
-                cfg=cfg, positions=pos,
-                block_apply=lambda p, x, positions: tfm.block_apply(
-                    p, x, cfg, dict(ctx, positions=positions), None)[0])
+            mtp_l = self._mtp_loss(params, h, tokens, pos, ctx)
             metrics["mtp_loss"] = mtp_l
             loss = loss + mtp_l
         return loss, metrics
+
+    def loss_dual(self, params, batchA, batchB, rng=None, pctx=None):
+        """Dual anti-phase microbatch loss (paper §2.3.1 overlap).
+
+        Runs both microbatches through one scanned layer step so each
+        microbatch's MoE all-to-alls can overlap the other's compute (see
+        ``parallel/overlap.py``). Returns ``(loss, metrics)`` with the
+        same metrics schema as ``loss`` (microbatch-averaged), so the
+        trainer's router-bias balancing consumes it unchanged.
+        """
+        from repro.parallel import context as pctx_mod
+        from repro.parallel import overlap
+        if pctx is not None:
+            with pctx_mod.use(pctx):
+                return overlap.dual_loss_and_metrics(
+                    self, params, batchA, batchB)
+        return overlap.dual_loss_and_metrics(self, params, batchA, batchB)
 
     def prefill(self, params, batch, extra_slots: int = 0, lengths=None):
         """Process the prompt; returns (last-position logits, decode cache).

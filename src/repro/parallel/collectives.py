@@ -78,6 +78,100 @@ def compressed_psum(x: jax.Array, axis: str, n_bits: int = 8) -> jax.Array:
     return y.reshape(shape).astype(x.dtype)
 
 
+def _spec_axes(spec) -> set:
+    """Mesh axes a PartitionSpec actually uses."""
+    used: set = set()
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        if isinstance(entry, str):
+            used.add(entry)
+        else:
+            used.update(entry)
+    return used
+
+
+def sharded_global_norm(tree, mesh, pspecs) -> jax.Array:
+    """Global L2 norm of a sharded gradient tree via an explicit psum.
+
+    Unlike ``optimizer.global_norm`` under GSPMD (where XLA decides where
+    the cross-shard reduction happens), this computes each device's local
+    partial sum-of-squares inside ``shard_map`` and combines with a psum
+    over every mesh axis — the trainer's grad-norm clipping is then a real
+    cross-replica collective by construction. Leaves replicated over some
+    axes contribute once (local partials are pre-divided by the
+    replication factor; replicas are bit-identical so this is exact).
+
+    ``pspecs``: PartitionSpec tree matching ``tree`` (see
+    ``sharding.param_pspecs``).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = treedef.flatten_up_to(pspecs)
+    total_size = 1
+    for a in mesh.axis_names:
+        total_size *= mesh.shape[a]
+    repl = []
+    for spec in spec_leaves:
+        used = _spec_axes(spec)
+        r = 1
+        for a in mesh.axis_names:
+            if a not in used:
+                r *= mesh.shape[a]
+        repl.append(float(r))
+
+    def local(ls):
+        s = jnp.zeros((), jnp.float32)
+        for leaf, r in zip(ls, repl):
+            if leaf is None:
+                continue
+            s = s + jnp.sum(leaf.astype(jnp.float32) ** 2) / r
+        for a in mesh.axis_names:
+            s = jax.lax.psum(s, a)
+        return s
+
+    sq = compat.shard_map(
+        local, mesh=mesh, in_specs=(tuple(spec_leaves),), out_specs=P(),
+        check_vma=False)(tuple(leaves))
+    return jnp.sqrt(sq)
+
+
+def _np_fletcher64(a) -> int:
+    """Host-side mirror of ``fletcher64`` for per-shard checksumming."""
+    import numpy as np
+    b = np.ascontiguousarray(np.asarray(a, np.float32)).view(np.uint32)
+    b = b.ravel().astype(np.uint64)
+    i = np.arange(1, b.size + 1, dtype=np.uint64)
+    s1 = int(b.sum()) & 0xFFFFFFFF
+    s2 = int((b * i).sum()) & 0xFFFFFFFF
+    return s1 ^ ((s2 << 1) & 0xFFFFFFFF)
+
+
+def device_checksums(tree) -> dict:
+    """Per-device checksums of a sharded pytree's *local shards*.
+
+    Real per-replica measurement (paper §6.1): each device's resident
+    bytes are read back and fletcher-summed on host, XOR-combined across
+    leaves. Returns ``{device_id: checksum}``. The SDC guard compares two
+    independent read-backs — corruption in device memory or on the
+    readback path shows up as a mismatch between reads (the trainer's
+    injector corrupts one read to exercise the alarm path).
+    """
+    out: dict = {}
+    for leaf in jax.tree.leaves(tree):
+        if not (hasattr(leaf, "dtype")
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            continue
+        if not hasattr(leaf, "addressable_shards"):
+            out[0] = out.get(0, 0) ^ _np_fletcher64(leaf)
+            continue
+        for sh in leaf.addressable_shards:
+            c = _np_fletcher64(sh.data)
+            out[sh.device.id] = out.get(sh.device.id, 0) ^ c
+    return out
+
+
 def fletcher64(x: jax.Array) -> jax.Array:
     """Cheap on-device checksum of a pytree leaf (SDC guard, paper §6.1).
     DP replicas must agree bit-for-bit; divergence flags silent corruption.

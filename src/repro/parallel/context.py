@@ -28,10 +28,23 @@ class ParallelCtx:
     pin_attn: bool = True                  # pin q/k/v + block outputs to
                                            # head sharding (kills GSPMD
                                            # fp32 score redistribution)
+    microbatches: int = 2                  # train step: 2 = dual anti-phase
+                                           # microbatch overlap (paper
+                                           # §2.3.1); 1 = single batch
 
     @property
     def ep_enabled(self) -> bool:
         return self.mesh is not None and self.moe_impl != "local"
+
+    @property
+    def dp_size(self) -> int:
+        """Total data-parallel degree (1 when unmeshed)."""
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
 
 
 _CURRENT = ParallelCtx()

@@ -101,6 +101,43 @@ def like_tree(shardings_leaf, tree):
     return jax.tree.map(lambda _: shardings_leaf, tree)
 
 
+def param_pspecs(mesh: Mesh, spec_tree, rules: Dict[str, Rule]):
+    """PartitionSpec pytree (same structure as the ParamSpec tree). Used
+    both to build NamedShardings and as shard_map in_specs for explicit
+    cross-replica collectives over the gradient tree (grad-norm psum)."""
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, mesh, rules),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def train_state_shardings(mesh: Mesh, spec_tree, rules: Dict[str, Rule]):
+    """Shardings for the full train state (paper §2.4 memory recipe).
+
+    Returns ``(param_shardings, opt_shardings, pspecs)``:
+
+    * params: per ``rules`` (fsdp_tp_rules: every big tensor sharded over
+      model x data, so params+opt fit the 10-byte/param budget),
+    * opt state (``optimizer.AdamWState``): fp32 master and bf16 m/v
+      mirror the param layout exactly; the step counter is replicated,
+    * pspecs: the PartitionSpec tree for explicit-collective helpers.
+    """
+    from repro.train.optimizer import AdamWState   # lazy: avoid cycle
+    pspecs = param_pspecs(mesh, spec_tree, rules)
+    pshard = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    # m/v mirror optimizer.init: non-float params carry None moments, so
+    # their sharding leaves must be None too or device_put's treedefs
+    # mismatch at meshed init/restore
+    import jax.numpy as jnp
+    mvshard = jax.tree.map(
+        lambda s, sh: sh if jnp.issubdtype(jnp.dtype(s.dtype), jnp.floating)
+        else None,
+        spec_tree, pshard, is_leaf=lambda x: isinstance(x, ParamSpec))
+    oshard = AdamWState(step=NamedSharding(mesh, P()),
+                        master=pshard, m=mvshard, v=mvshard)
+    return pshard, oshard, pspecs
+
+
 def fsdp_tp_rules(multi_pod: bool) -> Dict[str, Rule]:
     """Training rules: TP on the model axis + ZeRO-3/FSDP over the data
     axis for the big replicated dims. Every large tensor is sharded on

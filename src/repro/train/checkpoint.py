@@ -33,7 +33,9 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        flat[key] = np.asarray(leaf)
+        # device_get gathers mesh-sharded train state back to one logical
+        # host array — checkpoints are mesh-shape-independent by design
+        flat[key] = np.asarray(jax.device_get(leaf))
     return flat
 
 
@@ -75,7 +77,14 @@ def latest_step(directory: str) -> Optional[int]:
 def restore(directory: str, tree_like, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, dict]:
     """Restore into the structure of ``tree_like``; ``shardings`` (same
-    structure, optional) re-lays arrays onto the current mesh — elastic."""
+    structure, optional) re-lays arrays onto the current mesh — elastic.
+
+    ``tree_like`` only contributes *structure*: leaves may be
+    ``jax.ShapeDtypeStruct``s (the trainer builds it with ``eval_shape``
+    so a restore never materializes throwaway init arrays). With
+    ``shardings`` built on a survivor mesh this is the elastic re-mesh:
+    state saved on a (2, 4) mesh lands sharded on (1, 4) — arrays are
+    stored logically, so any mesh whose axes divide the shapes works."""
     if step is None:
         step = latest_step(directory)
         assert step is not None, f"no checkpoints in {directory}"

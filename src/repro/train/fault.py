@@ -26,18 +26,68 @@ class NodeFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
-    schedule: Dict[int, str]          # step -> kind ("node", "net", "sdc")
+    schedule: Dict[int, str]          # step -> kind ("node", "net", "sdc",
+                                      #               "slow:<replica>")
     fired: set = dataclasses.field(default_factory=set)
+    slow_factor: float = 10.0         # injected slowdown multiplier
 
     def check(self, step: int) -> None:
         kind = self.schedule.get(step)
-        if kind and step not in self.fired:
+        if kind and step not in self.fired and not kind.startswith("slow"):
             self.fired.add(step)
             if kind in ("node", "net"):
                 raise NodeFailure(f"injected {kind} failure at step {step}")
 
     def corrupts(self, step: int) -> bool:
         return self.schedule.get(step) == "sdc" and step not in self.fired
+
+    def slow_replica(self, step: int) -> Optional[int]:
+        """Replica index to slow down at ``step`` (None = no injection).
+        The trainer scales that replica's *measured* step time by
+        ``slow_factor`` — perturbing the real measurement path rather
+        than fabricating a timing vector."""
+        kind = self.schedule.get(step)
+        if kind and kind.startswith("slow"):
+            parts = kind.split(":")
+            return int(parts[1]) if len(parts) > 1 else 0
+        return None
+
+
+def replica_step_times(out, mesh, dp_axes, t0: float,
+                       fallback: Optional[float] = None) -> List[float]:
+    """Per-replica step times from a dispatched output's shards.
+
+    ``out``: any (replicated or sharded) output array of the step.
+    Blocks on each device's local shard in device order and records when
+    it completed relative to ``t0``; per-DP-replica time is the max over
+    that replica's model-axis devices.
+
+    Scope: this measures completion *skew*. A step whose body contains
+    cross-replica collectives (psum grad norm, EP all-to-alls)
+    serializes the replicas at those points, so a genuinely slow replica
+    inflates every replica's reading rather than only its own — ratio-
+    based detection then needs timing taken between collectives (a
+    per-device profiler hook at real scale). The trainer uses these
+    readings as the measurement substrate the injector perturbs
+    (``slow:<r>``) to exercise the monitor + mitigation policy.
+    """
+    import numpy as np
+
+    dev_t: Dict[int, float] = {}
+    for sh in getattr(out, "addressable_shards", []):
+        sh.data.block_until_ready()
+        dev_t[sh.device.id] = time.perf_counter() - t0
+    if fallback is None:
+        fallback = max(dev_t.values()) if dev_t else 0.0
+
+    devs = np.asarray(mesh.devices)
+    names = list(mesh.axis_names)
+    dp_idx = [names.index(a) for a in dp_axes]
+    perm = dp_idx + [i for i in range(devs.ndim) if i not in dp_idx]
+    dd = np.transpose(devs, perm)
+    n_rep = int(np.prod([devs.shape[i] for i in dp_idx])) if dp_idx else 1
+    dd = dd.reshape(n_rep, -1)
+    return [max(dev_t.get(d.id, fallback) for d in row) for row in dd]
 
 
 class StragglerMonitor:
@@ -54,7 +104,9 @@ class StragglerMonitor:
             self.ewma[i] = (t if self.ewma[i] == 0.0
                             else (1 - self.alpha) * self.ewma[i]
                             + self.alpha * t)
-        med = sorted(self.ewma)[len(self.ewma) // 2]
+        # lower median: with few replicas the upper median IS the
+        # straggler, which would mask it from its own comparison
+        med = sorted(self.ewma)[(len(self.ewma) - 1) // 2]
         slow = [i for i, e in enumerate(self.ewma)
                 if med > 0 and e > self.threshold * med]
         if slow:

@@ -44,10 +44,17 @@ def global_norm(grads) -> jax.Array:
 
 def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
            b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
-           clip_norm: Optional[float] = 1.0) -> Tuple[Any, AdamWState, dict]:
-    """Returns (new_params in original dtypes, new_state, stats)."""
+           clip_norm: Optional[float] = 1.0,
+           grad_norm: Optional[jax.Array] = None
+           ) -> Tuple[Any, AdamWState, dict]:
+    """Returns (new_params in original dtypes, new_state, stats).
+
+    ``grad_norm``: precomputed global norm (the meshed train step passes
+    ``collectives.sharded_global_norm`` — an explicit cross-replica psum —
+    so clipping is collective-exact rather than left to GSPMD placement).
+    """
     step = state.step + 1
-    gnorm = global_norm(grads)
+    gnorm = global_norm(grads) if grad_norm is None else grad_norm
     scale = 1.0
     if clip_norm is not None:
         scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
