@@ -1,18 +1,28 @@
-"""Serving hot-path benchmark: tokens/s, TTFT, and device dispatches per
-generated token (ISSUE 2 acceptance metric).
+"""Serving hot-path benchmark: tokens/s, TTFT, dispatches per generated
+token (ISSUE 2), and the paged FP8 cache's bytes/token + capacity levers
+(ISSUE 4).
 
 Measures the fused serving engine on one MLA config (deepseek-v3) and one
 GQA config (qwen3-14b) at smoke scale, and writes ``BENCH_serve.json``:
 
     PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
 
-The headline number is ``decode_dispatches_per_token``: steady-state decode
-issues **one** device dispatch per ``chunk`` steps (each emitting up to
-``slots`` tokens), so with chunk=8 / slots=2 the engine reports ≤ 1/16
-dispatch per generated token — down from the ≥3 host round-trips per token
-of the pre-fused per-step loop (decode_step dispatch + host argmax sync +
-per-slot cache splice). Also wired into ``benchmarks/run.py`` as the
-``serve_bench`` suite.
+Per arch, three rows:
+
+* ``dense``      — the ring-buffer engine: steady-state decode
+  dispatches/token (one fused dispatch per ``chunk`` steps), warm TTFT,
+  tokens/s, and the dense cache's bytes per token of context capacity.
+* ``paged-bf16`` — the block-pool engine at native storage. Its token
+  streams must be **bitwise-equal** to dense (``tokens_equal_dense``);
+  CI asserts this from the JSON.
+* ``paged-fp8``  — the block-pool engine at FP8 storage (per-token
+  scales): ``cache_bytes_per_token`` ≤ 0.55x dense, pool occupancy, and
+  ``max_resident_slots_at_dense_budget`` — how many *requests* of this
+  stream fit in the memory the dense engine spends on ``slots`` rings
+  (page-granular reservation x fp8 bytes; CI asserts ≥ 2x).
+
+The MLA row also carries the analytic Table-1 numbers at the production
+config (``kv_bytes_per_token``: 70272 B bf16, 35624 B fp8).
 """
 from __future__ import annotations
 
@@ -32,26 +42,52 @@ CONFIGS = [
     ("qwen3-14b", dict()),
 ]
 
+PAGE_SIZE = 8
 
-def bench_arch(arch: str, *, slots: int = 2, max_len: int = 64,
-               chunk: int = 8, requests: int = 6, max_new: int = 17,
-               use_mtp: bool = False) -> dict:
+
+def _smoke_cfg(arch: str):
     import dataclasses
 
-    import jax
     from repro.configs.base import get_config, smoke_config
-    from repro.serve.engine import Request, ServeEngine
-
     cfg = smoke_config(get_config(arch))
     if cfg.moe:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+def _mkreq(rid: int, cfg, max_new: int):
+    from repro.serve.engine import Request
+    return Request(rid, (np.arange(5 + rid * 2) * (rid + 3))
+                   % cfg.vocab_size, max_new=max_new)
+
+
+def _stream(eng, cfg, requests: int, max_new: int):
+    """Submit the canonical request stream and return its token streams
+    (greedy + deterministic params, so layouts are comparable)."""
+    reqs = [_mkreq(rid, cfg, max_new) for rid in range(requests)]
+    for r in reqs:
+        eng.submit(r)
+    tic = time.perf_counter()
+    eng.run_until_done()
+    wall = time.perf_counter() - tic
+    assert all(r.done for r in reqs)
+    return [r.out for r in reqs], wall
+
+
+def bench_arch(arch: str, *, slots: int = 2, max_len: int = 64,
+               chunk: int = 8, requests: int = 6, max_new: int = 17,
+               use_mtp: bool = False) -> dict:
+    """Dense-engine row: hot-path metrics + dense cache bytes/token."""
+    import jax
+    from repro.serve.engine import ServeEngine
+
+    cfg = _smoke_cfg(arch)
     eng = ServeEngine(cfg, slots=slots, max_len=max_len, chunk=chunk,
                       use_mtp=use_mtp)
 
     def mkreq(rid):
-        return Request(rid, (np.arange(5 + rid * 2) * (rid + 3))
-                       % cfg.vocab_size, max_new=max_new)
+        return _mkreq(rid, cfg, max_new)
 
     # warmup: compile every prefill bucket the measured requests will hit,
     # plus the splice and the fused decode chunk — TTFT below is warm-path
@@ -89,10 +125,14 @@ def bench_arch(arch: str, *, slots: int = 2, max_len: int = 64,
                          - (eng.stats["prefills"] - s0["prefills"])
                          - (eng.stats["splices"] - s0["splices"]))
 
+    # parity-reference stream on the warm engine (fresh request objects)
+    stream, _ = _stream(eng, cfg, requests, max_new)
+
     row = {
         "arch": arch,
         "family": cfg.family,
         "attention": cfg.attention,
+        "cache_layout": "dense",
         "slots": slots,
         "chunk": chunk,
         "requests": requests,
@@ -103,20 +143,134 @@ def bench_arch(arch: str, *, slots: int = 2, max_len: int = 64,
         "tokens_per_s": decode_tokens / wall if wall else 0.0,
         "ttft_ms_mean": float(np.mean(ttfts) * 1e3),
         "ttft_ms_p50": float(np.median(ttfts) * 1e3),
+        "cache_bytes_per_token": eng.cache_bytes_per_token(),
         "prefill_buckets_compiled": eng.compiled_prefill_buckets,
         "prefill_traces": eng.trace_counts["prefill"],
         "splice_traces": eng.trace_counts["splice"],
         "decode_traces": eng.trace_counts["decode"],
         "backend": jax.default_backend(),
     }
+    if cfg.attention == "mla":
+        from repro.configs.base import get_config
+        from repro.core import mla as mla_mod
+        full = get_config(arch)
+        row["kv_bytes_per_token_bf16"] = mla_mod.kv_bytes_per_token(
+            full, storage="bf16")
+        row["kv_bytes_per_token_fp8"] = mla_mod.kv_bytes_per_token(
+            full, storage="fp8")
     if use_mtp:
         row["mtp_acceptance"] = eng.acceptance_rate()
         row["mtp_drafts"] = eng.stats["drafts"]
-    return row
+    return row, stream
 
 
-def run(out: str | None = None) -> list:
-    rows = [bench_arch(arch, **kw) for arch, kw in CONFIGS]
+def bench_paged(arch: str, storage: str, dense_row: dict,
+                dense_stream: list, *, slots: int = 2, max_len: int = 64,
+                chunk: int = 8, requests: int = 6, max_new: int = 17,
+                use_mtp: bool = False) -> dict:
+    """Paged-engine row: same request stream through the block-pool cache."""
+    import jax
+    from repro.serve.engine import ServeEngine
+
+    cfg = _smoke_cfg(arch)
+    eng = ServeEngine(cfg, slots=slots, max_len=max_len, chunk=chunk,
+                      use_mtp=use_mtp, paged=True, page_size=PAGE_SIZE,
+                      page_storage=storage)
+    # warmup: compile both prefill buckets + quant/scatter/decode/release
+    # so the measured stream is warm-path like the dense row
+    for rid in (0, requests - 1):
+        eng.add_request(_mkreq(rid, cfg, max_new))
+        eng.run_until_done()
+    eng.stats["peak_pages_used"] = 0
+
+    # steady-state decode, same accounting as the dense row: prefill all
+    # requests up front, admit as pages free, time the chunk loop only
+    reqs = [_mkreq(rid, cfg, max_new) for rid in range(requests)]
+    handoffs = [(r, *eng.prefill_request(r)) for r in reqs]
+    rest = list(handoffs)
+    s0 = dict(eng.stats)
+    tic = time.perf_counter()
+    while any(x is not None for x in eng.active) or rest:
+        while rest and eng.can_admit(rest[0][0]):
+            r, first, payload = rest.pop(0)
+            eng.admit_prefilled(r, first, payload, eng.free_slots()[0])
+        eng.step()
+    wall = time.perf_counter() - tic
+    assert all(r.done for r in reqs)
+    stream = [r.out for r in reqs]
+    decode_tokens = (eng.stats["tokens"] - s0["tokens"]
+                     - (eng.stats["first_tokens"] - s0["first_tokens"]))
+
+    bpt = eng.cache_bytes_per_token()
+    dense_bpt = dense_row["cache_bytes_per_token"]
+    # capacity lever: how many of this stream's requests fit in the cache
+    # memory the dense engine spends on `slots` max_len rings — pages are
+    # reserved per request budget (prompt + max_new), not worst case
+    page_bytes = bpt * PAGE_SIZE
+    mean_req_bytes = float(np.mean([eng.pages_needed(r) for r in reqs])
+                           ) * page_bytes
+    dense_budget = dense_bpt * slots * max_len
+    max_resident = int(dense_budget // mean_req_bytes)
+
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "attention": cfg.attention,
+        "cache_layout": f"paged-{storage}",
+        "slots": slots,
+        "chunk": chunk,
+        "requests": requests,
+        "max_new": max_new,
+        "page_size": PAGE_SIZE,
+        "pool_pages": eng.pool_pages,
+        "decode_tokens": int(decode_tokens),
+        "tokens_per_s": decode_tokens / wall if wall else 0.0,
+        "cache_bytes_per_token": bpt,
+        "cache_bytes_ratio_vs_dense": bpt / dense_bpt,
+        "pool_peak_pages_used": eng.stats["peak_pages_used"],
+        "pool_peak_occupancy": eng.stats["peak_pages_used"]
+        / max(eng.pool_pages, 1),
+        "page_admits": eng.stats["page_admits"] - s0["page_admits"],
+        "page_releases": eng.stats["page_releases"] - s0["page_releases"],
+        "tokens_equal_dense": stream == dense_stream,
+        "mean_request_pages": float(
+            np.mean([eng.pages_needed(r) for r in reqs])),
+        "max_resident_slots_at_dense_budget": max_resident,
+        "resident_slots_ratio_vs_dense": max_resident / slots,
+        "backend": jax.default_backend(),
+    }
+
+
+def bench_all(arch: str, **kw) -> list:
+    dense_row, dense_stream = bench_arch(arch, **kw)
+    rows = [dense_row]
+    for storage in ("bf16", "fp8"):
+        rows.append(bench_paged(arch, storage, dense_row, dense_stream,
+                                **kw))
+    return rows
+
+
+def check(rows: list) -> None:
+    """ISSUE 4 acceptance gates, asserted from the written rows (CI runs
+    the same asserts against the JSON artifact)."""
+    by = {(r["arch"], r["cache_layout"]): r for r in rows}
+    for arch in {r["arch"] for r in rows}:
+        dense = by[(arch, "dense")]
+        bf16 = by[(arch, "paged-bf16")]
+        fp8 = by[(arch, "paged-fp8")]
+        assert bf16["tokens_equal_dense"], \
+            f"{arch}: paged-bf16 stream != dense"
+        assert fp8["cache_bytes_ratio_vs_dense"] <= 0.55, \
+            (arch, fp8["cache_bytes_ratio_vs_dense"])
+        assert fp8["resident_slots_ratio_vs_dense"] >= 2.0, \
+            (arch, fp8["resident_slots_ratio_vs_dense"])
+
+
+def run(out: str | None = None, chunk: int = 8) -> list:
+    rows = []
+    for arch, kw in CONFIGS:
+        rows.extend(bench_all(arch, chunk=chunk, **kw))
+    check(rows)
     if out:
         with open(out, "w") as f:
             json.dump({"suite": "serve_bench", "rows": rows}, f, indent=2)
@@ -127,10 +281,16 @@ def suite():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows."""
     for r in run(out="BENCH_serve.json"):
         us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
-        yield (f"serve_decode_{r['arch']}", us,
-               f"tok/s={r['tokens_per_s']:.1f} "
-               f"ttft_ms={r['ttft_ms_mean']:.1f} "
-               f"disp/tok={r['decode_dispatches_per_token']:.3f}")
+        if r["cache_layout"] == "dense":
+            yield (f"serve_decode_{r['arch']}", us,
+                   f"tok/s={r['tokens_per_s']:.1f} "
+                   f"ttft_ms={r['ttft_ms_mean']:.1f} "
+                   f"disp/tok={r['decode_dispatches_per_token']:.3f}")
+        else:
+            yield (f"serve_{r['cache_layout']}_{r['arch']}", us,
+                   f"tok/s={r['tokens_per_s']:.1f} "
+                   f"B/tok={r['cache_bytes_per_token']:.0f} "
+                   f"x{r['resident_slots_ratio_vs_dense']:.1f}slots")
 
 
 def main():
@@ -138,15 +298,23 @@ def main():
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--chunk", type=int, default=8)
     args = ap.parse_args()
-    rows = [bench_arch(arch, chunk=args.chunk, **kw)
-            for arch, kw in CONFIGS]
-    with open(args.out, "w") as f:
-        json.dump({"suite": "serve_bench", "rows": rows}, f, indent=2)
+    rows = run(out=args.out, chunk=args.chunk)
     for r in rows:
-        print(f"[serve_bench] {r['arch']}: {r['tokens_per_s']:.1f} tok/s, "
-              f"TTFT {r['ttft_ms_mean']:.1f} ms, "
-              f"{r['decode_dispatches_per_token']:.3f} dispatches/token "
-              f"(chunk={r['chunk']}, slots={r['slots']})")
+        if r["cache_layout"] == "dense":
+            print(f"[serve_bench] {r['arch']} dense: "
+                  f"{r['tokens_per_s']:.1f} tok/s, "
+                  f"TTFT {r['ttft_ms_mean']:.1f} ms, "
+                  f"{r['decode_dispatches_per_token']:.3f} disp/tok, "
+                  f"{r['cache_bytes_per_token']:.0f} B/tok")
+        else:
+            print(f"[serve_bench] {r['arch']} {r['cache_layout']}: "
+                  f"{r['tokens_per_s']:.1f} tok/s, "
+                  f"{r['cache_bytes_per_token']:.0f} B/tok "
+                  f"({r['cache_bytes_ratio_vs_dense']:.2f}x dense), "
+                  f"{r['max_resident_slots_at_dense_budget']} resident "
+                  f"slots at dense budget "
+                  f"({r['resident_slots_ratio_vs_dense']:.1f}x), "
+                  f"streams==dense: {r['tokens_equal_dense']}")
     print(f"[serve_bench] wrote {args.out}")
 
 

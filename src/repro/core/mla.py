@@ -119,13 +119,79 @@ def init_mla_cache(cfg: ModelConfig, layers: int, batch: int,
     )
 
 
+def init_paged_mla_cache(cfg: ModelConfig, layers: int, pool_pages: int,
+                         page_size: int, storage: str) -> dict:
+    """Latent page pool (no batch axis: pages are shared across slots).
+
+    Leaves ``(layers, pool_pages+1, page, rank/rope)``; the last page is
+    the trash page. FP8 storage adds per-token fp32 scale leaves. No
+    ``pos`` leaf — paged validity is positional (see core/paged.py).
+    """
+    from repro.core import paged
+    m = cfg.mla
+    paged.validate_storage(storage)
+    fp8 = storage == "fp8"
+    dt = paged.E4M3 if fp8 else jnp.dtype(cfg.cache_dtype_())
+    P1 = pool_pages + 1
+    c = dict(
+        ckv=jnp.zeros((layers, P1, page_size, m.kv_lora_rank), dt),
+        kr=jnp.zeros((layers, P1, page_size, m.qk_rope_dim), dt),
+    )
+    if fp8:
+        c["ckv_scale"] = jnp.zeros((layers, P1, page_size), jnp.float32)
+        c["kr_scale"] = jnp.zeros((layers, P1, page_size), jnp.float32)
+    return c
+
+
+def _absorb_queries(p: dict, q_nope: jax.Array, cfg: ModelConfig):
+    """q_abs[h] = q_nope[h] @ W_uk[h]^T — queries into latent space."""
+    m, nh = cfg.mla, cfg.num_heads
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, nh, m.qk_nope_dim)
+    return jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                      w_uk.astype(jnp.float32))           # (B,1,nh,rank)
+
+
+def _absorbed_attention(q_abs, q_rope, ckv, kr, valid, cfg: ModelConfig):
+    """Shared absorbed-decode softmax over a dense latent view.
+
+    ckv/kr: (B, T, rank/rope) cache rows (any layout origin — ring or
+    gathered pages); valid: (B, T) attendable mask. One implementation so
+    the dense and paged XLA paths are bitwise-identical given identical
+    rows and masks. Returns o_lat (B, 1, nh, rank) fp32.
+    """
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    if ckv.dtype != jnp.dtype(cfg.dtype):   # fp8 cache -> compute dtype
+        ckv = ckv.astype(cfg.dtype)
+        kr = kr.astype(cfg.dtype)
+    cdt = ckv.dtype
+    scores = (jnp.einsum("bshc,btc->bhst", q_abs.astype(cdt), ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshr,btr->bhst", q_rope.astype(cdt), kr,
+                           preferred_element_type=jnp.float32)) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,btc->bshc", attn.astype(cdt), ckv,
+                      preferred_element_type=jnp.float32)
+
+
+def _absorbed_out(p: dict, o_lat: jax.Array, x: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Absorb W_uv on the way out: out[h] = o_lat[h] @ W_uv[h]."""
+    m, nh = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, nh, m.v_head_dim)
+    out = jnp.einsum("bshc,chv->bshv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, nh * m.v_head_dim).astype(x.dtype)
+    return linear(out, p["w_o"], cfg)
+
+
 def mla_decode_step(p: dict, cache: dict, x: jax.Array, *,
                     cfg: ModelConfig, positions: jax.Array,
                     impl: str = "xla") -> Tuple[jax.Array, dict]:
     """Absorbed-form decode. x: (B, 1, d); cache leaves are per-layer slices
     (B, T, ...). Returns (out (B,1,d), new_cache)."""
     m = cfg.mla
-    nh = cfg.num_heads
     B = x.shape[0]
     T = cache["ckv"].shape[1]
 
@@ -139,10 +205,7 @@ def mla_decode_step(p: dict, cache: dict, x: jax.Array, *,
     pos = cache["pos"].at[ba, idx].set(positions[:, 0])
     new_cache = dict(ckv=ckv, kr=kr, pos=pos)
 
-    # absorb W_uk into q:  q_abs[h] = q_nope[h] @ W_uk[h]^T  -> latent space
-    w_uk = p["w_uk"].reshape(m.kv_lora_rank, nh, m.qk_nope_dim)
-    q_abs = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))          # (B,1,nh,rank)
+    q_abs = _absorb_queries(p, q_nope, cfg)
 
     if impl == "pallas":
         # registry-dispatched kernel op (backend per repro.kernels.registry)
@@ -152,29 +215,94 @@ def mla_decode_step(p: dict, cache: dict, x: jax.Array, *,
             positions[:, 0], scale=1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim))
         o_lat = o_lat[:, None]
     else:
-        scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-        if ckv.dtype != jnp.dtype(cfg.dtype):   # fp8 cache -> compute dtype
-            ckv = ckv.astype(cfg.dtype)
-            kr = kr.astype(cfg.dtype)
-        cdt = ckv.dtype
-        scores = (jnp.einsum("bshc,btc->bhst", q_abs.astype(cdt), ckv,
-                             preferred_element_type=jnp.float32)
-                  + jnp.einsum("bshr,btr->bhst", q_rope.astype(cdt), kr,
-                               preferred_element_type=jnp.float32)) * scale
         valid = (pos >= 0) & (pos <= positions)   # (B,T); positions (B,1)
-        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
-        attn = jax.nn.softmax(scores, axis=-1)
-        o_lat = jnp.einsum("bhst,btc->bshc", attn.astype(cdt), ckv,
-                           preferred_element_type=jnp.float32)
+        o_lat = _absorbed_attention(q_abs, q_rope, ckv, kr, valid, cfg)
 
-    # absorb W_uv on the way out: out[h] = o_lat[h] @ W_uv[h]
-    w_uv = p["w_uv"].reshape(m.kv_lora_rank, nh, m.v_head_dim)
-    out = jnp.einsum("bshc,chv->bshv", o_lat, w_uv.astype(jnp.float32))
-    out = out.reshape(B, 1, nh * m.v_head_dim).astype(x.dtype)
-    return linear(out, p["w_o"], cfg), new_cache
+    return _absorbed_out(p, o_lat, x, cfg), new_cache
 
 
-def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
-    """Table 1 quantity: latent-cache bytes per token across all layers."""
+def mla_paged_decode_step(p: dict, cache: dict, x: jax.Array, *,
+                          cfg: ModelConfig, positions: jax.Array,
+                          page_table: jax.Array,
+                          impl: str = "xla") -> Tuple[jax.Array, dict]:
+    """Paged absorbed-form decode (paper §2.1.2 quantized compression).
+
+    cache: one layer's pool slice — ckv/kr ``(P+1, page, ...)`` plus
+    ``*_scale`` leaves under fp8 storage. page_table: (B, pages_per_slot)
+    physical page ids. The step quantizes this token's latents into its
+    slot's current page, then attends over the slot's gathered pages —
+    in-register dequantization on the ``pallas`` impl, an XLA gather that
+    reuses the dense softmax (bitwise-identical at native storage) on
+    ``xla``. Returns (out (B,1,d), new_cache).
+    """
+    from repro.core import paged
     m = cfg.mla
-    return (m.kv_lora_rank + m.qk_rope_dim) * dtype_bytes * cfg.num_layers
+    qpos = positions[:, 0]
+    fp8 = "ckv_scale" in cache
+
+    q_nope, q_rope = _queries(p, x, cfg, positions)       # (B,1,nh,*)
+    ckv_new, kr_new = _latents(p, x, cfg, positions)      # (B,1,rank/rope)
+
+    new_cache = dict(cache)
+    if fp8:
+        qc, sc = paged.quantize_vecs(ckv_new[:, 0])
+        qk, sk = paged.quantize_vecs(kr_new[:, 0])
+        new_cache["ckv"] = paged.page_write(cache["ckv"], page_table, qpos, qc)
+        new_cache["kr"] = paged.page_write(cache["kr"], page_table, qpos, qk)
+        new_cache["ckv_scale"] = paged.page_write(
+            cache["ckv_scale"], page_table, qpos, sc)
+        new_cache["kr_scale"] = paged.page_write(
+            cache["kr_scale"], page_table, qpos, sk)
+    else:
+        new_cache["ckv"] = paged.page_write(
+            cache["ckv"], page_table, qpos, ckv_new[:, 0])
+        new_cache["kr"] = paged.page_write(
+            cache["kr"], page_table, qpos, kr_new[:, 0])
+
+    q_abs = _absorb_queries(p, q_nope, cfg)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+
+    if impl == "pallas":
+        from repro.kernels.paged_attention import ops as paged_ops
+        ones = jnp.ones(cache["ckv"].shape[:2], jnp.float32)
+        o_lat = paged_ops.paged_mla_decode(
+            q_abs[:, 0], q_rope[:, 0].astype(jnp.float32),
+            new_cache["ckv"], new_cache["kr"],
+            new_cache.get("ckv_scale", ones), new_cache.get("kr_scale", ones),
+            page_table, qpos, scale=scale)
+        o_lat = o_lat[:, None]
+    else:
+        ckv_t = paged.table_gather(new_cache["ckv"], page_table)
+        kr_t = paged.table_gather(new_cache["kr"], page_table)
+        if fp8:
+            cs_t = paged.table_gather(new_cache["ckv_scale"], page_table)
+            ks_t = paged.table_gather(new_cache["kr_scale"], page_table)
+            ckv_t = paged.dequantize_vecs(ckv_t, cs_t).astype(cfg.dtype)
+            kr_t = paged.dequantize_vecs(kr_t, ks_t).astype(cfg.dtype)
+        T = ckv_t.shape[1]
+        # positional validity: everything at or below the current decode
+        # position was written by this slot (pages never ring-wrap)
+        valid = jnp.arange(T, dtype=jnp.int32)[None, :] <= qpos[:, None]
+        o_lat = _absorbed_attention(q_abs, q_rope, ckv_t, kr_t, valid, cfg)
+
+    return _absorbed_out(p, o_lat, x, cfg), new_cache
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2,
+                       storage: str = "") -> int:
+    """Table 1 quantity: latent-cache bytes per token across all layers.
+
+    ``storage`` overrides ``dtype_bytes`` with the paged-cache storage
+    formats: ``"bf16"`` is the paper's 2-byte row (70 KB/token for V3);
+    ``"fp8"`` is 1 byte/element plus the per-token fp32 scale pair
+    (ckv + k_rope) each layer — just over half the bf16 row.
+    """
+    m = cfg.mla
+    row = m.kv_lora_rank + m.qk_rope_dim
+    if storage:
+        from repro.core import paged
+        paged.validate_storage(storage)
+        if storage == "fp8":
+            return (row + 2 * 4) * cfg.num_layers
+        dtype_bytes = 2
+    return row * dtype_bytes * cfg.num_layers

@@ -1,0 +1,158 @@
+"""Paged decode-cache core: block pool, page tables, FP8 page storage.
+
+The paper's serving constraint is memory *capacity*: MLA shrinks the
+per-token KV footprint to the latent ``(c_kv, k_rope)`` pair (Table 1) and
+§2.1.2 pairs it with low-precision storage so HBM stretches further. The
+dense engine still reserved a full ``max_len`` ring buffer per slot, so
+slot count was bounded by worst-case context. This module provides the
+building blocks for the paged alternative:
+
+* **Pool layout** — per attention segment, one shared pool of fixed-size
+  token blocks ("pages"): value leaves of shape ``(layers, pool_pages+1,
+  page, ...)``. The final page index (:func:`trash_page`) is a scratch
+  page that absorbs writes from freed/unmapped slots so a recycled page
+  can never be corrupted by a stale writer.
+* **Page table** — per decode slot, ``(B, max_len // page)`` int32 of
+  physical page ids (``trash`` where unmapped). Token position ``p`` lives
+  at page ``table[b, p // page]``, offset ``p % page``. Pages are written
+  strictly in position order and never ring-wrap, so *validity needs no
+  stored ``pos`` array*: slot ``b``'s cache row at logical position ``l``
+  is valid iff ``l <= qpos_b`` — everything at or below the current decode
+  position has been written by this slot, everything above is stale or
+  unwritten and is masked out.
+* **FP8 storage** — value leaves quantize per *token vector* (one fp32
+  scale per token per layer per leaf, the finest-grained analogue of the
+  paper's 1x128 activation tiles: the whole latent/KV vector of one token
+  is one tile). ``<leaf>_scale`` leaves have shape ``(layers, P+1, page)``.
+  Recurrent (SSM / RG-LRU) state never pages and stays full precision.
+
+``storage`` is ``"fp8"`` (E4M3 values + scales) or ``"bf16"`` (the model's
+native cache dtype, scale-free — named for the production configs; smoke
+configs store float32). At native storage the paged decode path is
+bitwise-identical to the dense ring cache (same values, same mask, same
+einsums), which the parity tests pin.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+E4M3 = jnp.float8_e4m3fn
+E4M3_MAX = 448.0
+
+STORAGES = ("fp8", "bf16")
+
+
+def validate_storage(storage: str) -> str:
+    if storage not in STORAGES:
+        raise ValueError(
+            f"unknown page storage {storage!r}; expected one of {STORAGES}")
+    return storage
+
+
+def trash_page(pool_pages: int) -> int:
+    """Index of the scratch page (pools allocate ``pool_pages + 1``)."""
+    return pool_pages
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Host-side page budget for a request that will hold ``tokens``."""
+    return -(-tokens // page_size)
+
+
+def quantize_vecs(x: jax.Array, vec_ndim: int = 1
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Per-token-vector FP8 quantization.
+
+    The trailing ``vec_ndim`` axes form one token's vector (1 for the MLA
+    latent / rope rows, 2 for a GQA ``(KV, hd)`` entry); everything before
+    them indexes tokens. Returns ``(q, scale)`` with ``q`` in E4M3 of x's
+    shape and ``scale`` fp32 of the token shape.
+    """
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(x.ndim - vec_ndim, x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=axes)
+    scale = jnp.maximum(amax, 1e-12) / E4M3_MAX
+    q = (xf / scale.reshape(scale.shape + (1,) * vec_ndim)).astype(E4M3)
+    return q, scale
+
+
+def dequantize_vecs(q: jax.Array, scale: jax.Array,
+                    vec_ndim: int = 1) -> jax.Array:
+    """Inverse of :func:`quantize_vecs` (fp32 out)."""
+    return q.astype(jnp.float32) * scale.reshape(
+        scale.shape + (1,) * vec_ndim)
+
+
+# ---------------------------------------------------------------------------
+# Pool read/write primitives (operate on one layer's pool slice)
+# ---------------------------------------------------------------------------
+
+
+def page_write(pool: jax.Array, table: jax.Array, positions: jax.Array,
+               vals: jax.Array) -> jax.Array:
+    """Write one token per slot into the pool.
+
+    pool: ``(P+1, page, ...)``; table: ``(B, pages_per_slot)`` physical
+    ids; positions: ``(B,)`` the token's position; vals: ``(B, ...)``.
+    Unmapped/freed slots write to the trash page (their table rows point
+    there), so concurrent owners of recycled pages are never clobbered.
+    """
+    page = pool.shape[1]
+    lp = jnp.clip(positions // page, 0, table.shape[1] - 1)
+    off = positions % page
+    phys = jnp.take_along_axis(table, lp[:, None], axis=1)[:, 0]
+    return pool.at[phys, off].set(vals.astype(pool.dtype))
+
+
+def table_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather each slot's pages into a dense view.
+
+    pool: ``(P+1, page, ...)``; table ``(B, pp)`` -> ``(B, pp*page, ...)``
+    in the pool dtype. Logical position ``l`` of row ``b`` lands at index
+    ``l`` of the result; rows past the slot's reserved pages come from the
+    trash page and must be masked by the caller (``l <= qpos``).
+    """
+    g = pool[table]                                   # (B, pp, page, ...)
+    B, pp, page = g.shape[:3]
+    return g.reshape((B, pp * page) + g.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> pages (quantize a bucket-shaped prefill cache into page data)
+# ---------------------------------------------------------------------------
+
+
+def entries_to_pages(leaf: jax.Array, page_size: int, storage: str,
+                     store_dtype, vec_ndim: int = 1) -> Dict[str, jax.Array]:
+    """Reshape a batch-1 prefill cache leaf into quantized page data.
+
+    leaf: ``(n, 1, T, ...)`` with ``T`` the (bucket) prompt capacity laid
+    out position-identically (no wrap — guaranteed for ``T >= length``).
+    Returns ``{"q": (n, T//page, page, ...)}`` plus ``{"scale": ...}`` for
+    fp8 storage. Pad rows (already zeroed by prefill assembly) quantize to
+    zero pages, keeping recycled-pool contents deterministic.
+    """
+    n, b1, T = leaf.shape[:3]
+    assert b1 == 1, leaf.shape
+    if T % page_size:
+        raise ValueError(f"prefill capacity {T} not a multiple of the "
+                         f"page size {page_size}")
+    paged = leaf.reshape((n, T // page_size, page_size) + leaf.shape[3:])
+    if storage == "fp8":
+        q, s = quantize_vecs(paged, vec_ndim)
+        return {"q": q, "scale": s}
+    return {"q": paged.astype(store_dtype)}
+
+
+def scatter_pages(pool: jax.Array, pages: jax.Array,
+                  ids: jax.Array) -> jax.Array:
+    """Write page data into the pool at physical ids.
+
+    pool: ``(n, P+1, page, ...)``; pages: ``(n, nP, page, ...)``; ids:
+    ``(nP,)`` physical page ids (trash-padded entries land in the scratch
+    page). Layer-stacked: the scatter covers all ``n`` layers at once.
+    """
+    return pool.at[:, ids].set(pages.astype(pool.dtype))

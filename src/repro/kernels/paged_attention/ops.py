@@ -1,0 +1,40 @@
+"""Registry entry point for the paged MLA absorbed-decode kernel.
+
+``paged_mla_decode(q_abs, q_rope, ckv, kr, ckv_s, kr_s, table, qpos,
+scale=...)`` dispatches through ``repro.kernels.registry``:
+``pallas``/``interpret`` walk the slot's page table with scalar-prefetch
+indexing and dequantize each FP8 page in-register (online softmax, one
+HBM pass over resident pages); ``ref`` is the gather + full-softmax jnp
+oracle. Native-dtype pools pass all-ones scales. The block length *is*
+the pool's page size — pages are the tiling unit, so no padding table is
+needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import registry
+from repro.kernels.paged_attention.paged_attention import \
+    paged_mla_decode_kernel
+from repro.kernels.paged_attention.ref import paged_mla_decode_ref
+
+paged_mla_decode = registry.kernel("paged_mla_decode")
+
+
+@paged_mla_decode.backend("ref")
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _paged_mla_decode_ref(q_abs, q_rope, ckv, kr, ckv_s, kr_s, table,
+                          qpos, *, scale: float):
+    return paged_mla_decode_ref(q_abs, q_rope, ckv, kr, ckv_s, kr_s,
+                                table, qpos, scale=scale)
+
+
+@paged_mla_decode.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _paged_mla_decode_kernel(q_abs, q_rope, ckv, kr, ckv_s, kr_s, table,
+                             qpos, *, scale: float, interpret: bool):
+    return paged_mla_decode_kernel(q_abs, q_rope, ckv, kr, ckv_s, kr_s,
+                                   table, qpos, scale=scale,
+                                   interpret=interpret)

@@ -1,0 +1,128 @@
+"""Paged MLA absorbed-decode flash kernel (paper §2.1.2 + §2.3.2).
+
+The dense flash-decode kernel (kernels/mla_attention) streams a slot's
+*contiguous* latent cache. Under the paged cache (core/paged.py) a slot's
+tokens live in non-contiguous fixed-size pages of a shared pool, stored
+FP8 with per-token scales — so the kernel must follow the slot's page
+table and dequantize in-register:
+
+  grid = (B, pages_per_slot); step (b, t) DMAs physical page
+  ``table[b, t]`` of the pool into VMEM via **scalar-prefetch indexing**
+  (the page table is an SMEM-resident prefetch operand consumed by the
+  BlockSpec index maps), multiplies the E4M3 rows by their scales, and
+  folds the page into an online softmax over the latent dimension:
+
+    ckv = q8(page) * scale[page]                     (page, R)
+    s   = (q_abs @ ckv^T + q_rope @ kr^T) * scale    (H, page)
+    online-softmax accumulate  o = sum p * ckv       (H, R)
+
+Validity is positional: logical row ``t*page + i`` of slot ``b`` is
+attendable iff it is ``<= qpos[b]`` (paged caches never ring-wrap, so
+everything at or below the current decode position was written by this
+slot; trash/stale rows all sit above it).
+
+HBM traffic is one pass over the slot's *resident* pages at 1 byte/elem
+(+4/token scales) — the memory-bound decode path the paper's Table 1 /
+§2.3.2 roofline is about, at roughly half the bf16 bytes.
+
+Inputs:
+  table (B, pp) i32  physical page ids   [scalar prefetch]
+  qpos (B,) i32      current decode position per slot  [scalar prefetch]
+  q_abs (B, H, R) f32, q_rope (B, H, Rr) f32
+  ckv (P+1, page, R), kr (P+1, page, Rr)   fp8 (or native dtype)
+  ckv_s (P+1, page) f32, kr_s (P+1, page) f32  (ones for native storage)
+
+Output: o_lat (B, H, R) f32 — latent-space attention output (W_uv applied
+by the caller).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(table_ref, qpos_ref, qa_ref, qr_ref, ckv_ref, kr_ref,
+            cs_ref, ks_ref, o_ref, m_ref, l_ref, acc_ref, *, page: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qa = qa_ref[0]                                     # (H, R)
+    qr = qr_ref[0]                                     # (H, Rr)
+    # in-register dequantization: one fp32 scale per token row
+    ckv = ckv_ref[0].astype(jnp.float32) * cs_ref[0][:, None]   # (page, R)
+    kr = kr_ref[0].astype(jnp.float32) * ks_ref[0][:, None]     # (page, Rr)
+
+    s = jnp.dot(qa, ckv.T, preferred_element_type=jnp.float32) \
+        + jnp.dot(qr, kr.T, preferred_element_type=jnp.float32)
+    # positional validity: logical row index vs current decode position
+    lpos = t * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = lpos <= qpos_ref[b]                        # (1, page)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[...]                                # (H, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)      # (H, page)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, ckv, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_mla_decode_kernel(q_abs: jax.Array, q_rope: jax.Array,
+                            ckv: jax.Array, kr: jax.Array,
+                            ckv_s: jax.Array, kr_s: jax.Array,
+                            table: jax.Array, qpos: jax.Array, *,
+                            scale: float,
+                            interpret: bool = False) -> jax.Array:
+    B, H, R = q_abs.shape
+    Rr = q_rope.shape[-1]
+    page = ckv.shape[1]
+    pp = table.shape[1]
+    from jax.experimental.pallas import tpu as pltpu
+
+    # scale folded into q (fp8 rows are scaled per token, so the score
+    # scale distributes onto the query side for free)
+    qa = q_abs.astype(jnp.float32) * scale
+    qr = q_rope.astype(jnp.float32) * scale
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # table, qpos
+        grid=(B, pp),
+        in_specs=[
+            pl.BlockSpec((1, H, R), lambda b, t, tbl, qp: (b, 0, 0)),
+            pl.BlockSpec((1, H, Rr), lambda b, t, tbl, qp: (b, 0, 0)),
+            pl.BlockSpec((1, page, R), lambda b, t, tbl, qp: (tbl[b, t], 0, 0)),
+            pl.BlockSpec((1, page, Rr), lambda b, t, tbl, qp: (tbl[b, t], 0, 0)),
+            pl.BlockSpec((1, page), lambda b, t, tbl, qp: (tbl[b, t], 0)),
+            pl.BlockSpec((1, page), lambda b, t, tbl, qp: (tbl[b, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, R), lambda b, t, tbl, qp: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, R), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
+        interpret=interpret,
+    )(table, qpos, qa, qr, ckv, kr, ckv_s, kr_s)

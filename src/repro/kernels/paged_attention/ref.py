@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the paged MLA absorbed-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_mla_decode_ref(q_abs, q_rope, ckv, kr, ckv_s, kr_s, table,
+                         qpos, *, scale: float):
+    """Gather + full softmax reference.
+
+    q_abs (B,H,R) / q_rope (B,H,Rr) fp32; ckv/kr (P+1, page, R/Rr) in the
+    storage dtype with per-token scales ckv_s/kr_s (P+1, page); table
+    (B, pp) physical page ids; qpos (B,) current decode positions.
+    Returns (B, H, R) fp32.
+    """
+    B, pp = table.shape
+    page = ckv.shape[1]
+    ckv_f = ckv.astype(jnp.float32) * ckv_s[..., None]
+    kr_f = kr.astype(jnp.float32) * kr_s[..., None]
+    ckv_t = ckv_f[table].reshape(B, pp * page, -1)      # (B, T, R)
+    kr_t = kr_f[table].reshape(B, pp * page, -1)        # (B, T, Rr)
+    s = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32), ckv_t)
+         + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32), kr_t)
+         ) * scale
+    valid = jnp.arange(pp * page)[None, :] <= qpos[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p, ckv_t)

@@ -67,6 +67,7 @@ _KERNEL_MODULES = (
     "repro.kernels.mla_attention.ops",
     "repro.kernels.moe_gemm.ops",
     "repro.kernels.logfmt.ops",
+    "repro.kernels.paged_attention.ops",
 )
 
 _REGISTRY: Dict[str, "KernelOp"] = {}

@@ -8,6 +8,11 @@ Requests are queued with ``submit()``; ``step()``/``run()`` admit them into
 slots (bucketed jitted prefill + jitted cache splice) and drive fused
 k-step decode chunks — the steady-state dispatch count is printed so the
 one-dispatch-per-chunk property is visible from the CLI.
+
+``--paged [--page-size 8] [--pool-pages N] [--page-storage fp8|bf16]``
+swaps in the paged block-pool cache (docs/serving.md §4): page-granular
+admission plus FP8 page storage; the pool occupancy and bytes/token are
+printed alongside the dispatch stats.
 """
 from __future__ import annotations
 
@@ -29,7 +34,15 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--mtp", action="store_true")
     ap.add_argument("--disagg", action="store_true")
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pool-pages", type=int, default=None)
+    ap.add_argument("--page-storage", default="fp8",
+                    choices=("fp8", "bf16"))
     args = ap.parse_args()
+    paged_kw = dict(paged=args.paged, page_size=args.page_size,
+                    pool_pages=args.pool_pages,
+                    page_storage=args.page_storage)
 
     from repro.configs.base import get_config, smoke_config
     from repro.serve.disagg import Disaggregator
@@ -47,7 +60,7 @@ def main():
         eng = Disaggregator(cfg, decode_slots=args.slots,
                             max_len=args.max_len, use_mtp=args.mtp,
                             chunk=args.chunk, temperature=args.temperature,
-                            top_k=args.top_k)
+                            top_k=args.top_k, **paged_kw)
         for r in reqs:
             eng.submit(r)
         eng.run()
@@ -58,20 +71,31 @@ def main():
     else:
         eng = ServeEngine(cfg, slots=args.slots, max_len=args.max_len,
                           use_mtp=args.mtp, chunk=args.chunk,
-                          temperature=args.temperature, top_k=args.top_k)
+                          temperature=args.temperature, top_k=args.top_k,
+                          **paged_kw)
         for r in reqs:
             eng.submit(r)
         eng.run_until_done()
         print(f"[serve] {eng.stats} acceptance="
               f"{eng.acceptance_rate():.2f}")
-    decode_dispatches = (eng.stats["dispatches"] - eng.stats["prefills"]
-                         - eng.stats["splices"])
+    # admission-side dispatches: prefill (+ its page-quantize step when
+    # paged), splice/scatter, and page releases — exclude them so the
+    # figure is fused decode chunks per token
+    admit = (eng.stats["prefills"] * (2 if eng.paged else 1)
+             + eng.stats["splices"] + eng.stats["page_admits"]
+             + eng.stats["page_releases"])
+    decode_dispatches = eng.stats["dispatches"] - admit
     decode_tokens = eng.stats["tokens"] - eng.stats["first_tokens"]
     if decode_tokens:
         print(f"[serve] decode dispatches/token = "
               f"{decode_dispatches / decode_tokens:.3f} "
               f"(chunk={args.chunk}, prefill buckets compiled: "
               f"{eng.compiled_prefill_buckets})")
+    if args.paged:
+        print(f"[serve] paged cache ({args.page_storage}): "
+              f"{eng.cache_bytes_per_token():.0f} B/token, "
+              f"pool {eng.pool_stats()}, "
+              f"peak pages {eng.stats['peak_pages_used']}")
     if args.mtp and not eng.use_mtp:
         print(f"[serve] --mtp ignored: {cfg.name} has no MTP module")
     elif args.mtp:

@@ -14,6 +14,10 @@ suitable for jit/pjit:
                                    masking, MTP drafting + acceptance stats
     init_cache(batch, max_len)     cache pytree (zeros)
     cache_batch_axes(batch, max_len)  declared batch-axis index per leaf
+    init_paged_cache(batch, max_len, page, pool, storage)  block-pool
+                                   decode cache (shared FP8/native page
+                                   pools + per-slot page tables; see
+                                   core/paged.py and serve docs)
     input_specs(shape_cfg)         ShapeDtypeStruct stand-ins per phase
 
 Models are assembled from scanned **segments**; each segment is a stack of
@@ -245,6 +249,30 @@ def _apply_kind(seg: Segment, p: dict, x: jax.Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 # Cache init per kind
 # ---------------------------------------------------------------------------
+
+
+def _kind_paged_cache(cfg: ModelConfig, seg: Segment, pool_pages: int,
+                      page_size: int, storage: str):
+    """Paged pool for one segment (attention caches only — see
+    core/paged.py). Recurrent state and windowed rings have no paged
+    layout; asking for one is a config error, not a silent fallback."""
+    if seg.kind == "dense_moe":
+        return {"dense": Lyr.init_paged_gqa_cache(cfg, seg.n, pool_pages,
+                                                  page_size, storage),
+                "moe": Lyr.init_paged_gqa_cache(cfg, seg.n, pool_pages,
+                                                page_size, storage)}
+    if seg.kind in ("dense", "moe", "decoder") and not seg.window:
+        if cfg.attention == "mla":
+            return mla_mod.init_paged_mla_cache(cfg, seg.n, pool_pages,
+                                                page_size, storage)
+        return Lyr.init_paged_gqa_cache(cfg, seg.n, pool_pages, page_size,
+                                        storage)
+    raise ValueError(
+        f"segment {seg.name!r} (kind={seg.kind!r}, window={seg.window}) has "
+        "no paged layout: only non-windowed attention caches page — "
+        "recurrent SSM/RG-LRU state stays slot-resident at full precision "
+        "and windowed rings are dense-only. Use the dense-cache engine for "
+        "this arch.")
 
 
 def _kind_cache(cfg: ModelConfig, seg: Segment, batch: int, max_len: int):
@@ -610,9 +638,14 @@ class Model:
         return dict(k=pad(k), v=pad(v), pos=pos)
 
     def decode_step(self, params, cache, tokens, positions):
-        """One decode step. tokens: (B,1) int32; positions: (B,1) int32."""
+        """One decode step. tokens: (B,1) int32; positions: (B,1) int32.
+        A paged cache (``init_paged_cache``) carries its ``page_table``
+        as a top-level leaf; it is threaded to every layer via ctx (one
+        (B, pages) array shared by the whole stack, not scanned)."""
         cfg = self.cfg
         ctx = dict(positions=positions, causal=True)
+        if "page_table" in cache:
+            ctx["page_table"] = cache["page_table"]
         extras = {"memory": cache["memory"]} if "memory" in cache else {}
         if cfg.family == "vlm":
             extras = {"patch_embeds": cache["memory"]}
@@ -742,6 +775,132 @@ class Model:
         if "mtp_h" in structs:
             axes["mtp_h"] = 0
         return axes
+
+    # -- paged cache family (block pool + page tables; core/paged.py) -------
+    def supports_paged(self) -> bool:
+        """True iff every cached segment has a paged layout (non-windowed
+        attention). Recurrent/windowed families are dense-cache only."""
+        try:
+            for seg in self.segments:
+                _kind_paged_cache(self.cfg, seg, 0, 1, "bf16")
+        except ValueError:
+            return False
+        return True
+
+    def init_paged_cache(self, batch: int, max_len: int, page_size: int,
+                         pool_pages: int, storage: str = "fp8"):
+        """Paged decode cache: shared page pools + per-slot page tables.
+
+        Attention segments become pools of ``pool_pages`` fixed-size token
+        blocks (+1 trash page) with no batch axis; ``page_table`` (B,
+        max_len//page_size) maps each slot's logical pages to physical
+        ones (trash where unmapped). ``storage="fp8"`` stores E4M3 values
+        with per-token scales; ``"bf16"`` stores the native cache dtype.
+        Aux leaves (encoder memory, MTP hidden) stay slot-resident.
+        """
+        from repro.core import paged as paged_mod
+        paged_mod.validate_storage(storage)
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"page_size {page_size}")
+        cfg = self.cfg
+        pp = max_len // page_size
+        cache: Dict[str, Any] = {
+            "page_table": jnp.full((batch, pp),
+                                   paged_mod.trash_page(pool_pages),
+                                   jnp.int32)}
+        for seg in self.segments:
+            cache[seg.name] = _kind_paged_cache(cfg, seg, pool_pages,
+                                                page_size, storage)
+        if cfg.family in ("encdec", "vlm"):
+            n = (int(max_len * cfg.src_len_ratio) if cfg.family == "encdec"
+                 else cfg.num_patches)
+            cache["memory"] = jnp.zeros((batch, n, cfg.d_model), cfg.dtype)
+        if cfg.mtp:
+            cache["mtp_h"] = jnp.zeros((batch, 1, cfg.d_model), cfg.dtype)
+        return cache
+
+    def paged_aux_axes(self) -> Dict[str, int]:
+        """Batch-axis declarations for the slot-resident leaves of a paged
+        cache (the ones admission still splices densely)."""
+        axes: Dict[str, int] = {}
+        if self.cfg.family in ("encdec", "vlm"):
+            axes["memory"] = 0
+        if self.cfg.mtp:
+            axes["mtp_h"] = 0
+        return axes
+
+    def prefill_to_pages(self, cache1, page_size: int, storage: str):
+        """Quantize a batch-1 prefill cache (``extra_slots=0``, so the
+        length axis is the static bucket) into page-granular payload:
+        ``{"pages": {segment: {leaf: (n, bucket//page, page, ...)}},
+        "aux": {...}}``. This is the disaggregation wire format — fp8
+        pages + scales are what `Handoff` ships, ~2x fewer bytes than the
+        bf16 rows at equal token count.
+        """
+        from repro.core import paged as paged_mod
+        store = jnp.dtype(self.cfg.cache_dtype_())
+
+        def seg_pages(sub):
+            out = {}
+            for name in ("ckv", "kr", "k", "v"):
+                if name not in sub:
+                    continue
+                vnd = 2 if name in ("k", "v") else 1
+                d = paged_mod.entries_to_pages(sub[name], page_size,
+                                               storage, store, vnd)
+                out[name] = d["q"]
+                if "scale" in d:
+                    out[name + "_scale"] = d["scale"]
+            return out
+
+        pages: Dict[str, Any] = {}
+        for seg in self.segments:
+            sub = cache1[seg.name]
+            if seg.kind == "dense_moe":
+                pages[seg.name] = {k: seg_pages(sub[k])
+                                   for k in ("dense", "moe")}
+            else:
+                pages[seg.name] = seg_pages(sub)
+        aux = {k: cache1[k] for k in ("memory", "mtp_h") if k in cache1}
+        return {"pages": pages, "aux": aux}
+
+    def admit_pages(self, cache, payload_pages, ids, table_row, slot):
+        """Scatter a request's quantized prefill pages into the pools and
+        install its page-table row (jit-friendly; ``slot`` traced).
+        ``ids``: (bucket_pages,) physical page ids (trash-padded beyond
+        the reserved range); ``table_row``: (pages_per_slot,) int32."""
+        from repro.core import paged as paged_mod
+
+        def seg_scatter(pool, pages):
+            return {k: paged_mod.scatter_pages(pool[k], pages[k], ids)
+                    for k in pool}
+
+        out = dict(cache)
+        for seg in self.segments:
+            sub = payload_pages[seg.name]
+            if seg.kind == "dense_moe":
+                out[seg.name] = {k: seg_scatter(cache[seg.name][k], sub[k])
+                                 for k in ("dense", "moe")}
+            else:
+                out[seg.name] = seg_scatter(cache[seg.name], sub)
+        table = cache["page_table"]
+        out["page_table"] = jax.lax.dynamic_update_slice(
+            table, table_row[None].astype(table.dtype), (slot, 0))
+        return out
+
+    def release_slot_pages(self, cache, slot):
+        """Point a freed slot's page-table row at the trash page so its
+        (still-running, masked) decode lane can never write into pages
+        recycled to a new owner (jit-friendly; ``slot`` traced)."""
+        table = cache["page_table"]
+        # trash id = pool_pages = (P+1) - 1, recovered from any pool leaf
+        leaf = jax.tree.leaves(cache[self.segments[0].name])[0]
+        trash = jnp.full((1, table.shape[1]), leaf.shape[1] - 1, table.dtype)
+        out = dict(cache)
+        out["page_table"] = jax.lax.dynamic_update_slice(
+            table, trash, (slot, 0))
+        return out
 
     # -- dry-run inputs --------------------------------------------------------
     def input_specs(self, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -170,11 +170,15 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
                   window: int = 0,
                   cache: Optional[dict] = None,
                   kv_x: Optional[jax.Array] = None,
-                  kv_positions: Optional[jax.Array] = None):
+                  kv_positions: Optional[jax.Array] = None,
+                  page_table: Optional[jax.Array] = None):
     """GQA self/cross attention. If ``cache`` is given, appends this step's
     K/V at slot ``positions`` and attends over the cache (decode). If
     ``kv_x`` is given, cross-attention over that memory (no cache logic).
-    Returns (out, new_cache).
+    With ``page_table``, ``cache`` is a paged K/V pool slice (see
+    ``core/paged.py``): the step writes this token's K/V (quantized under
+    fp8 storage) into its slot's current page and attends over the slot's
+    gathered pages. Returns (out, new_cache).
     """
     hd = cfg.head_dim_()
     src = x if kv_x is None else kv_x
@@ -200,7 +204,46 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
         q, k, v = shard_heads(q), shard_heads(k), shard_heads(v)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and page_table is not None:
+        # paged decode: write k,v (B,1,KV,hd) into the slot's current page
+        # and attend over its gathered pages (core/paged.py layout)
+        from repro.core import paged
+        qpos = positions[:, 0]
+        fp8 = "k_scale" in cache
+        new_cache = dict(cache)
+        if fp8:
+            qk, sk = paged.quantize_vecs(k[:, 0], vec_ndim=2)
+            qv, sv = paged.quantize_vecs(v[:, 0], vec_ndim=2)
+            new_cache["k"] = paged.page_write(cache["k"], page_table, qpos, qk)
+            new_cache["v"] = paged.page_write(cache["v"], page_table, qpos, qv)
+            new_cache["k_scale"] = paged.page_write(
+                cache["k_scale"], page_table, qpos, sk)
+            new_cache["v_scale"] = paged.page_write(
+                cache["v_scale"], page_table, qpos, sv)
+        else:
+            new_cache["k"] = paged.page_write(
+                cache["k"], page_table, qpos, k[:, 0])
+            new_cache["v"] = paged.page_write(
+                cache["v"], page_table, qpos, v[:, 0])
+        kc = paged.table_gather(new_cache["k"], page_table)
+        vc = paged.table_gather(new_cache["v"], page_table)
+        if fp8:
+            ks = paged.table_gather(new_cache["k_scale"], page_table)
+            vs = paged.table_gather(new_cache["v_scale"], page_table)
+            kc = paged.dequantize_vecs(kc, ks, vec_ndim=2).astype(cfg.dtype)
+            vc = paged.dequantize_vecs(vc, vs, vec_ndim=2).astype(cfg.dtype)
+        else:
+            kc = kc.astype(cfg.dtype) if kc.dtype != jnp.dtype(cfg.dtype) else kc
+            vc = vc.astype(cfg.dtype) if vc.dtype != jnp.dtype(cfg.dtype) else vc
+        # positional validity: k_pos is the logical index itself (pages
+        # never ring-wrap), so attention_scores' mask k_pos <= q_pos is
+        # exactly "written by this slot"; stale/trash rows sit above qpos
+        T = kc.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :],
+                                (kc.shape[0], T))
+        out = attention_scores(q, kc, vc, causal=causal,
+                               q_pos=positions, k_pos=kpos, window=window)
+    elif cache is not None:
         # decode: write k,v (B,1,KV,hd) at ring slot position %% T per batch
         T = cache["k"].shape[1]
         B = x.shape[0]
@@ -234,6 +277,31 @@ def init_gqa_cache(cfg: ModelConfig, layers: int, batch: int, max_len: int,
         v=jnp.zeros((layers, batch, T, cfg.num_kv_heads, hd), dt),
         pos=-jnp.ones((layers, batch, T), jnp.int32),
     )
+
+
+def init_paged_gqa_cache(cfg: ModelConfig, layers: int, pool_pages: int,
+                         page_size: int, storage: str) -> dict:
+    """K/V page pool (no batch axis: pages are shared across slots).
+
+    Leaves ``(layers, pool_pages+1, page, KV, hd)``; the last page is the
+    trash page. FP8 storage adds per-token fp32 scale leaves (one scale
+    over a token's whole ``(KV, hd)`` entry). No ``pos`` leaf — validity
+    is positional (see ``core/paged.py``).
+    """
+    from repro.core import paged
+    paged.validate_storage(storage)
+    fp8 = storage == "fp8"
+    hd = cfg.head_dim_()
+    dt = paged.E4M3 if fp8 else jnp.dtype(cfg.cache_dtype_())
+    P1 = pool_pages + 1
+    c = dict(
+        k=jnp.zeros((layers, P1, page_size, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((layers, P1, page_size, cfg.num_kv_heads, hd), dt),
+    )
+    if fp8:
+        c["k_scale"] = jnp.zeros((layers, P1, page_size), jnp.float32)
+        c["v_scale"] = jnp.zeros((layers, P1, page_size), jnp.float32)
+    return c
 
 
 # ---------------------------------------------------------------------------

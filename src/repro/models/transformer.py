@@ -109,8 +109,16 @@ def decoder_block_specs(cfg: ModelConfig, prefix: Tuple[int, ...]) -> dict:
 
 def _self_attention(p: dict, h: jax.Array, cfg: ModelConfig, ctx: dict,
                     cache):
+    # paged pool slices carry no "pos" leaf (positional validity); the
+    # page table rides in ctx (one (B, pages) array shared by every layer)
+    paged = cache is not None and "pos" not in cache
     if cfg.attention == "mla":
         if cache is not None:
+            if paged:
+                return mla_mod.mla_paged_decode_step(
+                    p, cache, h, cfg=cfg, positions=ctx["positions"],
+                    page_table=ctx["page_table"],
+                    impl=ctx.get("mla_impl", "xla"))
             return mla_mod.mla_decode_step(
                 p, cache, h, cfg=cfg, positions=ctx["positions"],
                 impl=ctx.get("mla_impl", "xla"))
@@ -124,7 +132,8 @@ def _self_attention(p: dict, h: jax.Array, cfg: ModelConfig, ctx: dict,
     window = ctx.get("window", 0)
     out, new_cache = Lyr.gqa_attention(
         p, h, cfg=cfg, positions=ctx["positions"],
-        causal=ctx.get("causal", True), window=window, cache=cache)
+        causal=ctx.get("causal", True), window=window, cache=cache,
+        page_table=ctx["page_table"] if paged else None)
     if cache is None and ctx.get("collect_cache"):
         # prefill: return this layer's K/V entries for cache assembly
         src = h

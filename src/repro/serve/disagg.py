@@ -12,7 +12,12 @@ prompt bucket), admission through the jitted donated cache splice, and
 decode through the fused k-step ``decode_loop`` chunks.
 
 Handoff bytes are tracked per request so the benchmark can reproduce the
-paper's KV-transfer bandwidth discussion.
+paper's KV-transfer bandwidth discussion. With ``paged=True`` the handoff
+ships the **quantized page payload** (``Model.prefill_to_pages``: fp8
+pages + per-token scales, sized to the prompt's bucket rather than a full
+``max_len`` ring), so ``cache_nbytes`` reports genuine wire bytes — about
+half the bf16 rows at equal token count, and far less than the dense
+engine's ``max_len``-slot handoff.
 """
 from __future__ import annotations
 
@@ -27,6 +32,8 @@ from repro.serve.engine import Request, ServeEngine
 
 
 def cache_nbytes(cache) -> int:
+    """Wire bytes of a handoff payload (dense batch-1 cache pytree, or a
+    paged engine's quantized page payload — pages, scales, and aux)."""
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache)
                if hasattr(l, "size"))
 
@@ -34,7 +41,8 @@ def cache_nbytes(cache) -> int:
 @dataclasses.dataclass
 class Handoff:
     req: Request
-    cache1: object        # batch-1, max_len-slot cache pytree from prefill
+    cache1: object        # dense: batch-1, max_len-slot cache pytree;
+                          # paged: quantized page payload (wire format)
     first_token: int
     nbytes: int
 
@@ -46,7 +54,10 @@ class Disaggregator:
     def __init__(self, cfg: ModelConfig, params=None, decode_slots: int = 4,
                  max_len: int = 128, prefill_ep: int = 32,
                  decode_ep: int = 128, use_mtp: bool = False,
-                 chunk: int = 8, temperature: float = 0.0, top_k: int = 0):
+                 chunk: int = 8, temperature: float = 0.0, top_k: int = 0,
+                 paged: bool = False, page_size: int = 8,
+                 pool_pages: Optional[int] = None,
+                 page_storage: str = "fp8"):
         # one parameter set, two "deployments" (EP sizes are modeled for
         # the perf benchmarks; compute here is the same process)
         self.prefill_ep = prefill_ep
@@ -54,7 +65,10 @@ class Disaggregator:
         self.decode = ServeEngine(cfg, params=params, slots=decode_slots,
                                   max_len=max_len, use_mtp=use_mtp,
                                   chunk=chunk, temperature=temperature,
-                                  top_k=top_k)
+                                  top_k=top_k, paged=paged,
+                                  page_size=page_size,
+                                  pool_pages=pool_pages,
+                                  page_storage=page_storage)
         self.params = self.decode.params
         self.model = self.decode.model
         self.queue: Deque[Handoff] = collections.deque()
@@ -62,12 +76,14 @@ class Disaggregator:
 
     def submit(self, req: Request, extras: Optional[Dict] = None):
         """Run prefill (prefill pool) and queue the cache for decode."""
+        self.decode._validate_paged(req)
         first, cache1 = self.decode.prefill_request(req, extras)
         self.queue.append(Handoff(req, cache1, first, cache_nbytes(cache1)))
 
     def admit(self):
-        """Move queued prefilled requests into free decode slots."""
-        while self.queue and self.decode.free_slots():
+        """Move queued prefilled requests into free decode slots (paged
+        engines also wait for enough pool pages — FIFO head-of-line)."""
+        while self.queue and self.decode.can_admit(self.queue[0].req):
             h = self.queue.popleft()
             slot = self.decode.free_slots()[0]
             self.decode.admit_prefilled(h.req, h.first_token, h.cache1, slot)

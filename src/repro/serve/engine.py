@@ -11,6 +11,18 @@ slot admission splices the prefilled cache into the batch cache with a
 single jitted ``dynamic_update_slice`` per leaf (donated, so the multi-GB
 cache updates in place on accelerators). See docs/serving.md.
 
+``paged=True`` swaps the dense per-slot ring buffers for the **paged FP8
+cache** (paper §2.1.2 quantized compression; core/paged.py): one shared
+pool of fixed-size token pages per attention segment, per-slot page
+tables, and page-granular admission — a request reserves only
+``ceil((prompt + max_new) / page_size)`` pages instead of a full
+``max_len`` ring, and ``submit()`` admits when *pages* (not just slots)
+are available. Prefill writes quantized pages; freeing a slot returns its
+pages to the pool and re-points its table row at the trash page so the
+slot's still-running (masked) decode lane can never corrupt recycled
+pages. At ``page_storage="bf16"`` the paged engine's token streams are
+bitwise-identical to the dense engine's.
+
 Throughput model and EP interplay live in ``network/perfmodel``;
 disaggregation in ``serve/disagg``.
 """
@@ -94,7 +106,10 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, slots: int = 4,
                  max_len: int = 128, seed: int = 0,
                  use_mtp: bool = False, chunk: int = 8,
-                 temperature: float = 0.0, top_k: int = 0):
+                 temperature: float = 0.0, top_k: int = 0,
+                 paged: bool = False, page_size: int = 8,
+                 pool_pages: Optional[int] = None,
+                 page_storage: str = "fp8"):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = (params if params is not None
@@ -105,7 +120,24 @@ class ServeEngine:
         self.chunk = chunk
         self.temperature = temperature
         self.top_k = top_k
-        self.cache = self.model.init_cache(slots, max_len)
+        self.paged = paged
+        if paged:
+            # block-pool cache: pool_pages defaults to the dense engine's
+            # token capacity (slots * max_len worth of pages) — same
+            # capacity, roughly half the bytes at fp8 storage; size it
+            # smaller to oversubscribe slots against memory
+            self.page_size = page_size
+            self.pages_per_slot = max_len // page_size
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else slots * self.pages_per_slot)
+            self.page_storage = page_storage
+            self.cache = self.model.init_paged_cache(
+                slots, max_len, page_size, self.pool_pages, page_storage)
+            self._free_pages: List[int] = list(range(self.pool_pages))
+            self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
+            self._aux_axes = self.model.paged_aux_axes()
+        else:
+            self.cache = self.model.init_cache(slots, max_len)
         # host mirrors of the on-device per-slot state (int32: jnp.asarray
         # would silently downcast int64 under x64-disabled jax)
         self.positions = np.zeros((slots,), np.int32)   # next position
@@ -119,21 +151,51 @@ class ServeEngine:
         self._rng = jax.random.PRNGKey(seed + 1)
         self.stats = {"steps": 0, "tokens": 0, "accepted_drafts": 0,
                       "drafts": 0, "dispatches": 0, "prefills": 0,
-                      "splices": 0, "first_tokens": 0}
+                      "splices": 0, "first_tokens": 0, "page_admits": 0,
+                      "page_releases": 0, "peak_pages_used": 0}
         # jit caches + trace counters (tests assert retrace bounds)
         self._prefill_fns: Dict[int, Any] = {}
         self._prefill_traces = 0
         self._splice_traces = 0
         self._decode_traces = 0
+        self._quant_traces = 0
+        self._scatter_traces = 0
+        self._release_traces = 0
         donate = jax.default_backend() != "cpu"
-        axes = self.model.cache_batch_axes(slots, max_len)
+        if paged:
+            def quant(cache1):
+                self._quant_traces += 1
+                return self.model.prefill_to_pages(cache1, self.page_size,
+                                                   self.page_storage)
 
-        def splice(big, small, slot):
-            self._splice_traces += 1
-            return _splice(big, small, slot, axes)
+            self._quant_fn = jax.jit(quant)
 
-        self._splice_fn = jax.jit(
-            splice, donate_argnums=(0,) if donate else ())
+            def scatter(cache, pages, aux, ids, row, slot):
+                self._scatter_traces += 1
+                cache = self.model.admit_pages(cache, pages, ids, row, slot)
+                if aux:
+                    big = {k: cache[k] for k in aux}
+                    cache.update(_splice(big, aux, slot, self._aux_axes))
+                return cache
+
+            self._scatter_fn = jax.jit(
+                scatter, donate_argnums=(0,) if donate else ())
+
+            def release(cache, slot):
+                self._release_traces += 1
+                return self.model.release_slot_pages(cache, slot)
+
+            self._release_fn = jax.jit(
+                release, donate_argnums=(0,) if donate else ())
+        else:
+            axes = self.model.cache_batch_axes(slots, max_len)
+
+            def splice(big, small, slot):
+                self._splice_traces += 1
+                return _splice(big, small, slot, axes)
+
+            self._splice_fn = jax.jit(
+                splice, donate_argnums=(0,) if donate else ())
 
         def decode_chunk(params, cache, state):
             self._decode_traces += 1
@@ -155,17 +217,25 @@ class ServeEngine:
     def trace_counts(self) -> Dict[str, int]:
         """How many times each jitted entry point has (re)traced — the
         compile-count contract: prefill ≤ #buckets, splice = 1,
-        decode = 1. Benchmarks/tests assert against this, not internals."""
+        decode = 1 (paged engines: quant/scatter ≤ #buckets — page counts
+        follow the bucket — and release = 1). Benchmarks/tests assert
+        against this, not internals."""
         return {"prefill": self._prefill_traces,
                 "splice": self._splice_traces,
-                "decode": self._decode_traces}
+                "decode": self._decode_traces,
+                "quant": self._quant_traces,
+                "scatter": self._scatter_traces,
+                "release": self._release_traces}
 
     # -- prefill ------------------------------------------------------------
     def _get_prefill(self, bucket: int):
         """Jitted prefill for one static (bucket, extra_slots) shape."""
         fn = self._prefill_fns.get(bucket)
         if fn is None:
-            extra = self.max_len - bucket
+            # paged admission quantizes the bucket-shaped cache into pages,
+            # so it needs no extra context slots; dense admission splices a
+            # full max_len ring
+            extra = 0 if self.paged else self.max_len - bucket
 
             def prefill(params, tokens, lengths, extras):
                 self._prefill_traces += 1
@@ -180,10 +250,12 @@ class ServeEngine:
 
     def prefill_request(self, req: Request, extras: Optional[Dict] = None):
         """Run bucketed prefill for one request; returns (first_token,
-        cache1). The cache already has ``max_len`` context slots
-        (extra_slots is derived from the static bucket), so admission is a
-        pure splice. Used by admission here and by the disaggregated
-        prefill pool."""
+        payload). Dense engines: payload is a batch-1 cache that already
+        has ``max_len`` context slots (extra_slots derived from the static
+        bucket), so admission is a pure splice. Paged engines: payload is
+        the quantized page pytree from ``Model.prefill_to_pages`` —
+        the disaggregation wire format (fp8 pages + per-token scales).
+        Used by admission here and by the disaggregated prefill pool."""
         L = len(req.prompt)
         bucket = bucket_length(L, self.max_len)
         toks = np.zeros((1, bucket), np.int32)
@@ -194,6 +266,9 @@ class ServeEngine:
         logits, cache1 = self._get_prefill(bucket)(
             self.params, jnp.asarray(toks), jnp.asarray(lengths),
             extras or {})
+        if self.paged:
+            self.stats["dispatches"] += 1
+            cache1 = self._quant_fn(cache1)
         # first token follows the same sampling policy as the fused loop
         from repro.models.api import sample_logits
         self._rng, sub = jax.random.split(self._rng)
@@ -205,12 +280,48 @@ class ServeEngine:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
+    def free_pages(self) -> int:
+        """Unreserved pages in the pool (0 for dense engines)."""
+        return len(self._free_pages) if self.paged else 0
+
+    def pages_needed(self, req: Request) -> int:
+        """Page budget a request reserves at admission: every position it
+        can touch — prompt plus decode budget — rounded up to pages. The
+        paged cache never ring-wraps, so this is also a hard bound."""
+        from repro.core import paged as paged_mod
+        return paged_mod.pages_for(len(req.prompt) + req.max_new,
+                                   self.page_size)
+
+    def can_admit(self, req: Request) -> bool:
+        """A slot is free and (paged engines) enough pool pages are too."""
+        if not self.free_slots():
+            return False
+        return not self.paged or self.pages_needed(req) <= self.free_pages()
+
+    def _validate_paged(self, req: Request):
+        if not self.paged:
+            return
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
+                f"({req.max_new}) exceeds max_len ({self.max_len}); the "
+                "paged cache never ring-wraps, so a request must fit its "
+                "page-table capacity")
+        if self.pages_needed(req) > self.pool_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {self.pages_needed(req)} pages "
+                f"but the pool only has {self.pool_pages}; it could never "
+                "admit — grow pool_pages or shrink the request")
+
     def submit(self, req: Request, extras: Optional[Dict] = None):
-        """Queue a request; ``step()`` admits it when a slot frees up."""
+        """Queue a request; ``step()`` admits it when a slot — and, for
+        paged engines, enough pool pages — free up."""
+        self._validate_paged(req)
         self.pending.append((req, extras))
 
     def add_request(self, req: Request, extras: Optional[Dict] = None):
         """Prefill + admit immediately. Raises when no slot is free."""
+        self._validate_paged(req)
         free = self.free_slots()
         if not free:
             raise RuntimeError(
@@ -224,19 +335,52 @@ class ServeEngine:
     def admit_prefilled(self, req: Request, first: int, cache1,
                         slot: int):
         """Admit an already-prefilled request into ``slot``: one donated
-        jitted splice of the prefill cache plus host-mirror bookkeeping.
-        ``max_new`` counts new tokens after the prompt, so the first token
-        (or an immediate EOS) can complete the request with zero decode
-        steps — in that case the splice is skipped entirely."""
+        jitted splice of the prefill cache (dense), or a page reservation
+        + quantized-page scatter + page-table install (paged), plus
+        host-mirror bookkeeping. ``max_new`` counts new tokens after the
+        prompt, so the first token (or an immediate EOS) can complete the
+        request with zero decode steps — in that case the cache write is
+        skipped entirely and no pages are reserved."""
+        finishes = (req.max_new <= 1
+                    or (req.eos is not None and first == req.eos))
+        if self.paged and not finishes:
+            # capacity check BEFORE any bookkeeping mutates, so a raise
+            # leaves the request/stats re-admittable as-is
+            n = self.pages_needed(req)
+            if n > len(self._free_pages):
+                raise RuntimeError(
+                    f"no free pages: request {req.rid} needs {n}, pool has "
+                    f"{len(self._free_pages)} of {self.pool_pages}; drive "
+                    "step() until a request completes, or submit() to "
+                    "queue (see free_pages())")
         req.out.append(first)
         self.stats["tokens"] += 1
         self.stats["first_tokens"] += 1
-        if req.max_new <= 1 or (req.eos is not None and first == req.eos):
+        if finishes:
             req.done = True
             return
         self.stats["dispatches"] += 1
-        self.stats["splices"] += 1
-        self.cache = self._splice_fn(self.cache, cache1, slot)
+        if self.paged:
+            alloc = [self._free_pages.pop() for _ in range(n)]
+            self._slot_pages[slot] = alloc
+            trash = self.pool_pages
+            row = np.full((self.pages_per_slot,), trash, np.int32)
+            row[:n] = alloc
+            # prefill pages beyond the reserved range (bucket > request
+            # budget) land in the trash page
+            n_p = jax.tree.leaves(cache1["pages"])[0].shape[1]
+            ids = np.asarray([alloc[i] if i < n else trash
+                              for i in range(n_p)], np.int32)
+            self.stats["page_admits"] += 1
+            used = self.pool_pages - len(self._free_pages)
+            self.stats["peak_pages_used"] = max(
+                self.stats["peak_pages_used"], used)
+            self.cache = self._scatter_fn(
+                self.cache, cache1["pages"], cache1["aux"],
+                jnp.asarray(ids), jnp.asarray(row), slot)
+        else:
+            self.stats["splices"] += 1
+            self.cache = self._splice_fn(self.cache, cache1, slot)
         self.positions[slot] = len(req.prompt)
         self._tokens[slot] = first
         self._left[slot] = req.max_new - 1
@@ -246,7 +390,10 @@ class ServeEngine:
 
     def _admit_pending(self):
         while self.pending and self.free_slots():
-            req, extras = self.pending.popleft()
+            req, extras = self.pending[0]
+            if not self.can_admit(req):
+                break     # FIFO head-of-line: wait for pages to recycle
+            self.pending.popleft()
             first, cache1 = self.prefill_request(req, extras)
             self.admit_prefilled(req, first, cache1, self.free_slots()[0])
 
@@ -301,6 +448,45 @@ class ServeEngine:
             if not host["active"][i]:
                 r.done = True
                 self.active[i] = None
+                if self.paged and self._slot_pages[i]:
+                    # recycle: pages back to the pool; the slot's table
+                    # row is re-pointed at the trash page so its masked
+                    # decode lane can't write into a new owner's pages
+                    self._free_pages.extend(self._slot_pages[i])
+                    self._slot_pages[i] = []
+                    self.stats["dispatches"] += 1
+                    self.stats["page_releases"] += 1
+                    self.cache = self._release_fn(self.cache, i)
+
+    def pool_stats(self) -> Dict[str, Any]:
+        """Page-pool occupancy (zeros for dense engines)."""
+        if not self.paged:
+            return dict(pages_total=0, pages_free=0, pages_used=0,
+                        occupancy=0.0)
+        used = self.pool_pages - len(self._free_pages)
+        return dict(pages_total=self.pool_pages,
+                    pages_free=len(self._free_pages), pages_used=used,
+                    occupancy=used / self.pool_pages if self.pool_pages
+                    else 0.0)
+
+    def cache_bytes_per_token(self) -> float:
+        """Attention-cache bytes per token of context capacity — the
+        paper's Table 1 lever. Dense: ring buffers (values + pos) over
+        ``slots * max_len`` tokens. Paged: pool pages (values + scales,
+        trash page excluded) over ``pool_pages * page_size`` tokens, plus
+        the page-table overhead (4/page_size bytes/token)."""
+        segs = self.model.segments
+        if self.paged:
+            per_page = sum(
+                leaf.nbytes / (self.pool_pages + 1)
+                for seg in segs
+                for leaf in jax.tree.leaves(self.cache[seg.name]))
+            per_tok = per_page / self.page_size
+            return per_tok + self.cache["page_table"].nbytes / (
+                self.slots * self.max_len)
+        total = sum(leaf.nbytes for seg in segs
+                    for leaf in jax.tree.leaves(self.cache[seg.name]))
+        return total / (self.slots * self.max_len)
 
     def run_until_done(self, max_steps: int = 1000):
         """Drive chunks until every submitted/admitted request completes.

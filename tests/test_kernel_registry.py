@@ -213,6 +213,29 @@ def _moe_case(dims, dtype):
     return build, _allclose(tol, tol)
 
 
+def _paged_mla_case(dims, storage):
+    def build(rng):
+        from repro.core import paged
+        B, H, R, Rr, pool, page, pp = dims
+        ks = jax.random.split(rng, 4)
+        qa = jax.random.normal(ks[0], (B, H, R), jnp.float32)
+        qr = jax.random.normal(ks[1], (B, H, Rr), jnp.float32)
+        ckv = jax.random.normal(ks[2], (pool + 1, page, R), jnp.float32)
+        kr = jax.random.normal(ks[3], (pool + 1, page, Rr), jnp.float32)
+        if storage == "fp8":
+            ckv, cs = paged.quantize_vecs(ckv)
+            kr, ks_ = paged.quantize_vecs(kr)
+        else:
+            cs = jnp.ones((pool + 1, page), jnp.float32)
+            ks_ = jnp.ones((pool + 1, page), jnp.float32)
+        # each slot owns a disjoint run of physical pages, trash beyond
+        ids = jax.random.permutation(jax.random.PRNGKey(7), pool)[:B * pp]
+        table = ids.reshape(B, pp).astype(jnp.int32)
+        qpos = jnp.arange(B, dtype=jnp.int32) * 3 + (pp * page) // 2
+        return (qa, qr, ckv, kr, cs, ks_, table, qpos), dict(scale=0.11)
+    return build, _allclose(1e-4, 1e-4)
+
+
 def _logfmt_encode_case(shape, n_bits):
     def build(rng):
         x = jax.random.normal(rng, shape) * jnp.exp(
@@ -252,6 +275,12 @@ PARITY_CASES = {
         _moe_case((4, 128, 128, 128), jnp.bfloat16),
         _moe_case((1, 8, 256, 64), jnp.bfloat16),
         _moe_case((3, 40, 72, 96), jnp.float32),     # ragged -> padded
+    ],
+    "paged_mla_decode": [
+        _paged_mla_case((2, 8, 64, 16, 12, 16, 4), "fp8"),
+        _paged_mla_case((2, 8, 64, 16, 12, 16, 4), "bf16"),
+        _paged_mla_case((1, 4, 128, 32, 8, 8, 6), "fp8"),
+        _paged_mla_case((3, 16, 32, 8, 24, 4, 8), "fp8"),
     ],
     "logfmt_encode": [
         _logfmt_encode_case((8, 128), 8),
