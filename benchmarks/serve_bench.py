@@ -23,15 +23,28 @@ Per arch, three rows:
 
 The MLA row also carries the analytic Table-1 numbers at the production
 config (``kv_bytes_per_token``: 70272 B bf16, 35624 B fp8).
+
+**Sharded rows** (ISSUE 5): the meshed serving engine on a (2, 4) =
+data x model host mesh, per EP impl (``ep_flat`` / ``ep_dedup``), using
+the train bench's MoE config (``top_k=4 > group_limit=2``, so the
+paper's §4.3 node-limited dedup reduction is visible at decode): sharded
+decode tokens/s, token-stream equality vs the single-device engine, and
+the decode **all-to-all bytes per step** read off the compiled lowering
+via ``parallel.overlap.collective_bytes`` — CI asserts ep_dedup moves
+strictly fewer bytes than ep_flat from the JSON. Device count is locked
+at first backend init, so ``run()`` collects these rows in an 8-device
+subprocess (``--sharded-only``); the parent's jax stays 1-device.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
@@ -241,6 +254,108 @@ def bench_paged(arch: str, storage: str, dense_row: dict,
     }
 
 
+MESH_SHAPE = (2, 4)
+# per-EP-shard token counts must clear the 8-row capacity floor
+# (core/moe.capacity) before the dedup wire reduction can show: with
+# 64 slots each model column sees 8 tokens/step, flat capacity 16 rows
+# vs dedup 8 — below that both protocols bottom out at the floor and
+# dedup's metadata sideband would dominate.
+SHARDED_SLOTS = 64
+
+
+def bench_sharded(*, slots: int = SHARDED_SLOTS, max_len: int = 32,
+                  chunk: int = 8, requests: int = 8,
+                  max_new: int = 17) -> list:
+    """Sharded serving rows: one per EP impl on the (2, 4) host mesh.
+
+    Must run in a process with >= 8 devices (``run()`` spawns one); uses
+    the train bench's MoE config so ``top_k > group_limit`` makes the
+    dedup reduction measurable.
+    """
+    import jax
+
+    try:
+        from benchmarks.train_bench import bench_config
+    except ImportError:          # run as a script: benchmarks/ is sys.path[2]
+        from train_bench import bench_config
+
+    from repro.compat import make_mesh
+    from repro.parallel import context as pctx_mod
+    from repro.serve.engine import ServeEngine
+
+    need = MESH_SHAPE[0] * MESH_SHAPE[1]
+    if len(jax.devices()) < need:
+        raise RuntimeError(
+            f"bench_sharded needs {need} devices, found {len(jax.devices())}"
+            " — run via serve_bench.run() (8-device subprocess) or set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    cfg = bench_config()
+
+    def stream(ctx):
+        eng = ServeEngine(cfg, slots=slots, max_len=max_len, chunk=chunk,
+                          seed=0, ctx=ctx)
+        reqs = [_mkreq(rid, cfg, max_new) for rid in range(requests)]
+        # warm the compile caches so the timed run is steady-state
+        warm = [_mkreq(rid, cfg, max_new) for rid in range(requests)]
+        for r in warm:
+            eng.submit(r)
+        eng.run_until_done()
+        for r in reqs:
+            eng.submit(r)
+        s0 = dict(eng.stats)
+        tic = time.perf_counter()
+        eng.run_until_done()
+        wall = time.perf_counter() - tic
+        assert all(r.done for r in reqs)
+        toks = (eng.stats["tokens"] - s0["tokens"]
+                - (eng.stats["first_tokens"] - s0["first_tokens"]))
+        return eng, [r.out for r in reqs], toks, wall
+
+    _, ref_stream, _, _ = stream(None)
+    rows = []
+    mesh = make_mesh(MESH_SHAPE, ("data", "model"))
+    for impl in ("ep_flat", "ep_dedup"):
+        ctx = pctx_mod.ParallelCtx(mesh=mesh, dp_axes=("data",),
+                                   moe_impl=impl, wire="fp8")
+        eng, s, toks, wall = stream(ctx)
+        rows.append({
+            "arch": cfg.name,
+            "family": cfg.family,
+            "attention": cfg.attention,
+            "cache_layout": "dense-sharded",
+            "mesh_shape": list(MESH_SHAPE),
+            "moe_impl": impl,
+            "wire": "fp8",
+            "slots": slots,
+            "chunk": chunk,
+            "requests": requests,
+            "max_new": max_new,
+            "decode_tokens": int(toks),
+            "tokens_per_s": toks / wall if wall else 0.0,
+            "decode_alltoall_bytes": eng.decode_alltoall_bytes(),
+            "decode_traces": eng.trace_counts["decode"],
+            "tokens_equal_single_device": s == ref_stream,
+            "backend": jax.default_backend(),
+        })
+    return rows
+
+
+def sharded_rows_subprocess() -> list:
+    """Collect the sharded rows in a forced-8-device subprocess (the
+    parent's jax device count is locked at first init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-only"],
+        capture_output=True, text=True, env=env, timeout=1200,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded serve bench failed:\n{r.stderr[-3000:]}")
+    # rows ride stdout between sentinel lines (XLA noise goes to stderr)
+    payload = r.stdout.split("SHARDED_JSON:", 1)[1]
+    return json.loads(payload)["rows"]
+
+
 def bench_all(arch: str, **kw) -> list:
     dense_row, dense_stream = bench_arch(arch, **kw)
     rows = [dense_row]
@@ -251,10 +366,12 @@ def bench_all(arch: str, **kw) -> list:
 
 
 def check(rows: list) -> None:
-    """ISSUE 4 acceptance gates, asserted from the written rows (CI runs
-    the same asserts against the JSON artifact)."""
-    by = {(r["arch"], r["cache_layout"]): r for r in rows}
-    for arch in {r["arch"] for r in rows}:
+    """ISSUE 4 + ISSUE 5 acceptance gates, asserted from the written rows
+    (CI runs the same asserts against the JSON artifact)."""
+    by = {(r["arch"], r["cache_layout"]): r for r in rows
+          if r["cache_layout"] != "dense-sharded"}
+    for arch in {r["arch"] for r in rows
+                 if r["cache_layout"] != "dense-sharded"}:
         dense = by[(arch, "dense")]
         bf16 = by[(arch, "paged-bf16")]
         fp8 = by[(arch, "paged-fp8")]
@@ -264,12 +381,24 @@ def check(rows: list) -> None:
             (arch, fp8["cache_bytes_ratio_vs_dense"])
         assert fp8["resident_slots_ratio_vs_dense"] >= 2.0, \
             (arch, fp8["resident_slots_ratio_vs_dense"])
+    sharded = {r["moe_impl"]: r for r in rows
+               if r["cache_layout"] == "dense-sharded"}
+    if sharded:
+        for impl, r in sharded.items():
+            assert r["tokens_equal_single_device"], \
+                f"sharded {impl}: stream != single-device engine"
+        assert 0 < sharded["ep_dedup"]["decode_alltoall_bytes"] \
+            < sharded["ep_flat"]["decode_alltoall_bytes"], \
+            {k: v["decode_alltoall_bytes"] for k, v in sharded.items()}
 
 
-def run(out: str | None = None, chunk: int = 8) -> list:
+def run(out: str | None = None, chunk: int = 8,
+        sharded: bool = True) -> list:
     rows = []
     for arch, kw in CONFIGS:
         rows.extend(bench_all(arch, chunk=chunk, **kw))
+    if sharded:
+        rows.extend(sharded_rows_subprocess())
     check(rows)
     if out:
         with open(out, "w") as f:
@@ -281,7 +410,12 @@ def suite():
     """benchmarks/run.py hook: (name, us_per_call, derived) rows."""
     for r in run(out="BENCH_serve.json"):
         us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
-        if r["cache_layout"] == "dense":
+        if r["cache_layout"] == "dense-sharded":
+            yield (f"serve_sharded_{r['moe_impl']}", us,
+                   f"tok/s={r['tokens_per_s']:.1f} "
+                   f"a2a_B/step={r['decode_alltoall_bytes']} "
+                   f"mesh={tuple(r['mesh_shape'])}")
+        elif r["cache_layout"] == "dense":
             yield (f"serve_decode_{r['arch']}", us,
                    f"tok/s={r['tokens_per_s']:.1f} "
                    f"ttft_ms={r['ttft_ms_mean']:.1f} "
@@ -297,10 +431,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="emit only the sharded rows as JSON on stdout "
+                         "(used by run()'s 8-device subprocess)")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded-row subprocess")
     args = ap.parse_args()
-    rows = run(out=args.out, chunk=args.chunk)
+    if args.sharded_only:
+        rows = bench_sharded()
+        print("SHARDED_JSON:" + json.dumps({"rows": rows}))
+        return
+    rows = run(out=args.out, chunk=args.chunk, sharded=not args.no_sharded)
     for r in rows:
-        if r["cache_layout"] == "dense":
+        if r["cache_layout"] == "dense-sharded":
+            print(f"[serve_bench] sharded {r['moe_impl']} "
+                  f"mesh={tuple(r['mesh_shape'])}: "
+                  f"{r['tokens_per_s']:.1f} tok/s, decode a2a "
+                  f"{r['decode_alltoall_bytes']} B/step, streams==single: "
+                  f"{r['tokens_equal_single_device']}")
+        elif r["cache_layout"] == "dense":
             print(f"[serve_bench] {r['arch']} dense: "
                   f"{r['tokens_per_s']:.1f} tok/s, "
                   f"TTFT {r['ttft_ms_mean']:.1f} ms, "

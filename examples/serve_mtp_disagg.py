@@ -4,6 +4,21 @@ predictable stream so the MTP module has learnable structure, then serves
 batched requests and reports the paper's §2.3.3 acceptance metric.
 
 Run:  PYTHONPATH=src python examples/serve_mtp_disagg.py
+
+The serving stack is ctx-aware (docs/serving.md §5): ``ctx=None`` (the
+default used here) is the zero-config single-device path. To shard the
+same deployment over a device mesh, build a ``ParallelCtx`` and hand it
+to the pools — e.g. with 8 devices::
+
+    from repro.compat import make_mesh
+    from repro.parallel import context as pctx_mod
+    dctx = pctx_mod.ParallelCtx(mesh=make_mesh((1, 4), ("data", "model")),
+                                dp_axes=("data",), moe_impl="ep_dedup")
+    pctx = pctx_mod.ParallelCtx(mesh=make_mesh((2, 4), ("data", "model")),
+                                dp_axes=("data",), moe_impl="ep_flat")
+    Disaggregator(cfg, ..., ctx=dctx, prefill_ctx=pctx)   # cross-mesh
+
+(or pass ``--mesh/--prefill-mesh`` to ``repro.launch.serve``).
 """
 import dataclasses
 import sys
@@ -45,8 +60,11 @@ def main():
           f"{out['history'][-1]['loss']:.2f}")
 
     print("serving with prefill/decode disaggregation + MTP drafts...")
+    # ctx/prefill_ctx=None: single-device pools, the zero-config default
+    # (see the module docstring for the meshed variant)
     dis = Disaggregator(cfg, params=tr.params, decode_slots=3, max_len=64,
-                        prefill_ep=32, decode_ep=128, use_mtp=True)
+                        prefill_ep=32, decode_ep=128, use_mtp=True,
+                        ctx=None, prefill_ctx=None)
     for rid in range(6):
         prompt = ((np.arange(8) + rid) % 8).astype(np.int32)
         dis.submit(Request(rid, prompt, max_new=16))

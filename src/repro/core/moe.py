@@ -109,9 +109,17 @@ def shared_expert(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 def capacity(tokens: int, mc: MoEConfig, experts: Optional[int] = None,
              k: Optional[int] = None) -> int:
+    """Static per-expert capacity-buffer rows for ``tokens`` assignments.
+
+    Floors at 8 rows (rounded up to 8s for TPU-friendly tiling). The
+    floor matters at decode shapes: an EP shard seeing only a few tokens
+    per step pays 8 rows per expert column regardless of protocol, so
+    ep_dedup's wire reduction only becomes visible once per-shard token
+    counts lift capacity off the floor (serve_bench sizes its sharded
+    rows accordingly)."""
     e = experts or mc.num_experts
     c = int(math.ceil(tokens * (k or mc.top_k) / e * mc.capacity_factor))
-    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU-friendly tiling
+    return max(8, -(-c // 8) * 8)
 
 
 class DispatchPlan(NamedTuple):

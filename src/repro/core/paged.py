@@ -62,6 +62,22 @@ def pages_for(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
 
 
+def pool_model_axes(leaf_name: str, ndim: int):
+    """Model-axis shardability of one pool leaf, declared by name (the
+    paged analogue of ``Model.paged_aux_axes`` / sharding's name-driven
+    ``_CACHE_AXES``): GQA K/V pools ``(layers, P+1, page, KV, hd)`` can
+    shard their KV-head axis over the model axis; per-token scale
+    sidebands ``(layers, P+1, page)`` and the MLA latent/rope pools (no
+    head axis — the latent is shared by every head, which is the whole
+    point of MLA) replicate. The *page* axis is never sharded: admission
+    scatters and decode gathers index physical page ids, and splitting
+    those across devices would turn every table lookup into a collective.
+    """
+    if leaf_name in ("k", "v") and ndim == 5:
+        return 3
+    return None
+
+
 def quantize_vecs(x: jax.Array, vec_ndim: int = 1
                   ) -> Tuple[jax.Array, jax.Array]:
     """Per-token-vector FP8 quantization.

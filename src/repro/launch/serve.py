@@ -13,12 +13,42 @@ one-dispatch-per-chunk property is visible from the CLI.
 swaps in the paged block-pool cache (docs/serving.md §4): page-granular
 admission plus FP8 page storage; the pool occupancy and bytes/token are
 printed alongside the dispatch stats.
+
+``--mesh D,M`` runs the whole hot path sharded over a ``(data, model)``
+mesh (docs/serving.md §5): params per the serving inference rules,
+batch/slots over ``data``, heads + experts over ``model``, with
+``--moe-impl ep_flat|ep_dedup`` routing MoE through the EP shard_map at
+``--wire fp8|bf16|fp32`` dispatch precision; the decode all-to-all
+bytes/step are printed from the compiled lowering. With ``--disagg``,
+``--prefill-mesh D,M`` puts the prefill pool on its own (differently
+sized) mesh — the cross-mesh handoff stages through host memory.
+Requires enough devices (e.g. ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` for a CPU dry run).
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def _make_ctx(spec, moe_impl: str, wire: str):
+    """'D,M' (or launch/train.py's 'DxM') -> ParallelCtx over a
+    (data, model) mesh; None passes through (the zero-config
+    single-device default)."""
+    if not spec:
+        return None
+    from repro.compat import make_mesh
+    from repro.parallel import context as pctx_mod
+    try:
+        shape = tuple(int(s) for s in spec.replace("x", ",").split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'D,M' or 'DxM' (got {spec!r})")
+    if len(shape) != 2:
+        raise SystemExit(f"--mesh expects 'D,M' or 'DxM' (got {spec!r})")
+    mesh = make_mesh(shape, ("data", "model"))
+    return pctx_mod.ParallelCtx(mesh=mesh, dp_axes=("data",),
+                                moe_impl=moe_impl, wire=wire)
 
 
 def main():
@@ -39,10 +69,25 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None)
     ap.add_argument("--page-storage", default="fp8",
                     choices=("fp8", "bf16"))
+    ap.add_argument("--mesh", default=None, metavar="D,M",
+                    help="shard serving over a (data, model) mesh, e.g. "
+                         "'2,4' (default: single-device)")
+    ap.add_argument("--prefill-mesh", default=None, metavar="D,M",
+                    help="disagg only: separate mesh for the prefill "
+                         "pool (cross-mesh handoff via host)")
+    ap.add_argument("--moe-impl", default="ep_flat",
+                    choices=("local", "ep_flat", "ep_dedup"),
+                    help="MoE dispatch when meshed (ignored unmeshed)")
+    ap.add_argument("--wire", default="fp8",
+                    choices=("fp8", "bf16", "fp32"),
+                    help="EP dispatch wire precision when meshed")
     args = ap.parse_args()
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
                     page_storage=args.page_storage)
+    ctx = _make_ctx(args.mesh, args.moe_impl, args.wire)
+    if args.prefill_mesh and not args.disagg:
+        raise SystemExit("--prefill-mesh only applies with --disagg")
 
     from repro.configs.base import get_config, smoke_config
     from repro.serve.disagg import Disaggregator
@@ -60,24 +105,44 @@ def main():
         eng = Disaggregator(cfg, decode_slots=args.slots,
                             max_len=args.max_len, use_mtp=args.mtp,
                             chunk=args.chunk, temperature=args.temperature,
-                            top_k=args.top_k, **paged_kw)
+                            top_k=args.top_k, ctx=ctx,
+                            prefill_ctx=_make_ctx(args.prefill_mesh,
+                                                  args.moe_impl, args.wire),
+                            **paged_kw)
         for r in reqs:
             eng.submit(r)
         eng.run()
         stats = eng.decode.stats
-        print(f"[serve] disaggregated: handoff "
-              f"{eng.handoff_bytes / 1e6:.2f} MB, {stats}")
+        if eng.cross_mesh:
+            # prefills ran on the separate prefill pool — surface its
+            # counters too, or the operator sees prefills=0 for a run
+            # that did N of them
+            print(f"[serve] disaggregated (cross-mesh): handoff "
+                  f"{eng.handoff_bytes / 1e6:.2f} MB, decode {stats}, "
+                  f"prefill {eng.prefill_pool.stats}")
+        else:
+            print(f"[serve] disaggregated: handoff "
+                  f"{eng.handoff_bytes / 1e6:.2f} MB, {stats}")
+        prefill_eng = eng.prefill_pool
         eng = eng.decode
     else:
         eng = ServeEngine(cfg, slots=args.slots, max_len=args.max_len,
                           use_mtp=args.mtp, chunk=args.chunk,
                           temperature=args.temperature, top_k=args.top_k,
-                          **paged_kw)
+                          ctx=ctx, **paged_kw)
         for r in reqs:
             eng.submit(r)
         eng.run_until_done()
         print(f"[serve] {eng.stats} acceptance="
               f"{eng.acceptance_rate():.2f}")
+        prefill_eng = eng
+    if eng.meshed:
+        m = eng.ctx.mesh
+        print(f"[serve] sharded over mesh "
+              f"{dict(zip(m.axis_names, m.devices.shape))} "
+              f"(EP degree {eng.ctx.model_size}), "
+              f"moe_impl={args.moe_impl}, wire={args.wire}, decode "
+              f"all-to-all {eng.decode_alltoall_bytes()} B/step (lowered)")
     # admission-side dispatches: prefill (+ its page-quantize step when
     # paged), splice/scatter, and page releases — exclude them so the
     # figure is fused decode chunks per token
@@ -90,7 +155,7 @@ def main():
         print(f"[serve] decode dispatches/token = "
               f"{decode_dispatches / decode_tokens:.3f} "
               f"(chunk={args.chunk}, prefill buckets compiled: "
-              f"{eng.compiled_prefill_buckets})")
+              f"{prefill_eng.compiled_prefill_buckets})")
     if args.paged:
         print(f"[serve] paged cache ({args.page_storage}): "
               f"{eng.cache_bytes_per_token():.0f} B/token, "

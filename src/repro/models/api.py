@@ -12,6 +12,9 @@ suitable for jit/pjit:
     decode_loop(params, cache, state, k)  k fused decode steps under one
                                    lax.scan: on-device sampling, EOS/max-len
                                    masking, MTP drafting + acceptance stats
+                                   (``prefill``/``decode_loop`` also take
+                                   ``pctx=`` — a ParallelCtx scoped for the
+                                   trace, used by the sharded serving path)
     init_cache(batch, max_len)     cache pytree (zeros)
     cache_batch_axes(batch, max_len)  declared batch-axis index per leaf
     init_paged_cache(batch, max_len, page, pool, storage)  block-pool
@@ -514,8 +517,14 @@ class Model:
                     self, params, batchA, batchB)
         return overlap.dual_loss_and_metrics(self, params, batchA, batchB)
 
-    def prefill(self, params, batch, extra_slots: int = 0, lengths=None):
+    def prefill(self, params, batch, extra_slots: int = 0, lengths=None,
+                pctx=None):
         """Process the prompt; returns (last-position logits, decode cache).
+
+        ``pctx``: optional ``ParallelCtx`` scoped for the duration of the
+        trace (mirrors ``loss(pctx=)``) — the sharded serving engine's
+        meshed prefill threads its ctx here so MoE layers dispatch through
+        the EP shard_map instead of relying on the ambient global context.
 
         ``lengths`` (B,) enables the bucketed path: ``tokens`` is padded on
         the right to a static bucket length S and only the first
@@ -528,6 +537,14 @@ class Model:
         returned logits are taken at position ``lengths-1`` per row. One compile then serves every prompt length
         in the bucket.
         """
+        if pctx is not None:
+            from repro.parallel import context as pctx_mod
+            with pctx_mod.use(pctx):
+                return self._prefill_inner(params, batch, extra_slots,
+                                           lengths)
+        return self._prefill_inner(params, batch, extra_slots, lengths)
+
+    def _prefill_inner(self, params, batch, extra_slots, lengths):
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -682,7 +699,7 @@ class Model:
 
     def decode_loop(self, params, cache, state, k: int, *,
                     temperature: float = 0.0, top_k: int = 0,
-                    use_mtp: bool = False):
+                    use_mtp: bool = False, pctx=None):
         """Run ``k`` fused decode steps under one ``lax.scan``.
 
         Everything the per-token host loop used to do round-trips for
@@ -694,7 +711,24 @@ class Model:
         state: see ``init_decode_state``. Returns ``(tokens (B,k),
         emitted (B,k) bool, cache, state)`` — tokens are -1 where the slot
         was inactive at that step.
+
+        ``pctx``: optional ``ParallelCtx`` scoped for the trace (mirrors
+        ``loss(pctx=)``): the sharded serving engine threads its ctx here
+        so every scanned decode step's MoE routes through the EP
+        shard_map — the paper's decode-side large-EP deployment.
         """
+        if pctx is not None:
+            from repro.parallel import context as pctx_mod
+            with pctx_mod.use(pctx):
+                return self._decode_loop_inner(
+                    params, cache, state, k, temperature=temperature,
+                    top_k=top_k, use_mtp=use_mtp)
+        return self._decode_loop_inner(params, cache, state, k,
+                                       temperature=temperature,
+                                       top_k=top_k, use_mtp=use_mtp)
+
+    def _decode_loop_inner(self, params, cache, state, k: int, *,
+                           temperature: float, top_k: int, use_mtp: bool):
         cfg = self.cfg
         assert not use_mtp or cfg.mtp is not None
 

@@ -154,10 +154,12 @@ def _ffn(p: dict, h: jax.Array, cfg: ModelConfig, ctx: Optional[dict] = None):
         from repro.parallel import context as pctx
         c = pctx.get()
         if c.ep_enabled:
-            # EP path is train-only; bucketed-prefill pad masking (ctx
-            # "valid") is not threaded through the two-hop dispatch.
+            # train, prefill AND decode: bucketed-prefill pad masking (ctx
+            # "valid") folds pads into the dispatch's overflow bucket, so
+            # they consume no capacity and no wire (see moe_ffn_sharded)
             from repro.parallel import ep
-            y, rr, drop = ep.moe_ffn_sharded(p["moe"], h, cfg, c)
+            y, rr, drop = ep.moe_ffn_sharded(p["moe"], h, cfg, c,
+                                             valid=(ctx or {}).get("valid"))
         else:
             y, rr, drop = moe_mod.moe_ffn(
                 p["moe"], h, cfg, valid=(ctx or {}).get("valid"))

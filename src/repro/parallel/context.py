@@ -1,8 +1,10 @@
 """Parallel execution context.
 
 Models are written once and consult this context to decide how to execute
-(local vs shard_map EP MoE, remat policy). The launcher/dry-run sets it;
-tests default to local single-device execution.
+(local vs shard_map EP MoE, remat policy). The launchers set it — the
+trainer threads it into the meshed train step, and the serving engine
+(``serve/engine.ServeEngine(ctx=...)``) threads it into the sharded
+prefill/decode programs; tests default to local single-device execution.
 """
 from __future__ import annotations
 
@@ -45,6 +47,14 @@ class ParallelCtx:
         for a in self.dp_axes:
             n *= self.mesh.shape[a]
         return n
+
+    @property
+    def model_size(self) -> int:
+        """Size of the model/TP axis (1 when unmeshed) — the EP degree of
+        the serving deployment when ``ep_axis == tp_axis``."""
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
 
 
 _CURRENT = ParallelCtx()

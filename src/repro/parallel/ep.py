@@ -307,9 +307,18 @@ def _ep_dedup_local(wg, bias, w1, w3, w2, x, mask, cfg: ModelConfig,
 
 
 def moe_ffn_sharded(p: dict, x: jax.Array, cfg: ModelConfig,
-                    pctx: ParallelCtx):
+                    pctx: ParallelCtx, valid=None):
     """MoE layer over the mesh. x: (B, S, d) global. Returns
-    (y, RouteResult-like, drop_frac)."""
+    (y, RouteResult-like, drop_frac).
+
+    ``valid`` ((B, S) bool, optional) marks real tokens: bucketed-prefill
+    pads are folded into the same overflow bucket as divisibility padding,
+    so they consume no expert capacity and no wire bytes (the serving
+    engine's sharded prefill path). Note the capacity per EP shard is
+    computed from the padded shard token count — when nothing drops
+    (serving smoke configs run capacity_factor-headroom), results match
+    the local path's exact-length dispatch token-for-token.
+    """
     mc = cfg.moe
     mesh = pctx.mesh
     axis = pctx.ep_axis
@@ -333,6 +342,11 @@ def moe_ffn_sharded(p: dict, x: jax.Array, cfg: ModelConfig,
     tok_div = cols if ftp else dp_total * cols
     Tpad = -(-T // tok_div) * tok_div
     mask = jnp.arange(Tpad) < T
+    if valid is not None:
+        v = valid.reshape(-1).astype(bool)
+        if Tpad != T:
+            v = jnp.pad(v, (0, Tpad - T))
+        mask = mask & v
     if Tpad != T:
         xt = jnp.pad(xt, [(0, Tpad - T), (0, 0)])
 

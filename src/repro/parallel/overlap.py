@@ -19,7 +19,13 @@ The HLO helpers (``lowered_text`` / ``while_body_op_counts`` /
 ``collective_bytes``) turn the docstring's "inspect the compiled HLO"
 claim into reusable test/bench utilities: the overlap tests assert both
 microbatches' all-to-alls appear in ONE scan body, and the train bench
-measures ep_flat-vs-ep_dedup wire bytes straight off the lowering.
+measures ep_flat-vs-ep_dedup wire bytes straight off the lowering. The
+serving side reuses them too: the sharded engine's fused decode chunk is
+a scan whose per-step MoE all-to-alls carry the same
+schedulable-overlap freedom (no data dependency on the neighboring
+dense compute), and ``ServeEngine.decode_alltoall_bytes()`` /
+serve_bench's sharded rows read the decode wire bytes with
+``collective_bytes`` exactly as the train bench does.
 """
 from __future__ import annotations
 

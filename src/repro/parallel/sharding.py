@@ -14,7 +14,7 @@ Two built-in strategies:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -167,6 +167,22 @@ def rules_for(cfg, phase: str, multi_pod: bool) -> Dict[str, Rule]:
     return tp_rules(multi_pod)
 
 
+def serve_rules(multi_pod: bool, ep_ftp: bool = False) -> Dict[str, Rule]:
+    """Inference (decode) rules for the sharded serving engine: attention
+    heads + dense matmuls TP over the model axis, experts EP on the model
+    axis — the paper's decode deployment (large-EP, no cross-node TP).
+
+    ``expert_ff`` engages its data-axis TP only when the ctx opts into
+    ``ep_ftp``; otherwise each model column keeps its experts' FF weights
+    whole, matching ``parallel/ep.py``'s shard_map in_specs so the decode
+    loop never re-gathers expert weights per layer.
+    """
+    r = tp_rules(multi_pod)
+    if not ep_ftp:
+        r["expert_ff"] = None
+    return r
+
+
 # ---------------------------------------------------------------------------
 # Decode-cache sharding: leaf-name-driven (see models/api cache layouts)
 # ---------------------------------------------------------------------------
@@ -217,6 +233,67 @@ def cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
     paths = jax.tree_util.tree_flatten_with_path(cache_structs)[0]
     treedef = jax.tree.structure(cache_structs)
     return jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
+
+
+def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
+                       model_axis: str = "model"):
+    """Shard a paged decode cache (``Model.init_paged_cache`` layout).
+
+    Pool leaves carry **no batch axis** (pages are shared across slots), so
+    the dp axes never apply to them; instead each pool leaf is
+    replicated-or-model-sharded per the leaf-name declaration in
+    ``core/paged.pool_model_axes`` (GQA K/V pools shard their KV-head
+    axis; scale sidebands and the MLA latent/rope pools replicate — same
+    declared-per-family style as ``Model.paged_aux_axes``). The page
+    table is replicated: it is tiny, host-authored, and every model
+    column needs the full slot->page mapping. Aux slot-resident leaves
+    (encoder memory, MTP hidden) shard their batch axis over dp.
+    """
+    from repro.core import paged as paged_mod
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    msize = mesh.shape[model_axis]
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        entries: list = [None] * leaf.ndim
+        if name in ("memory", "mtp_h"):
+            if leaf.shape[0] % dp_total == 0 and leaf.shape[0] > 0:
+                entries[0] = (tuple(dp_axes) if len(dp_axes) > 1
+                              else dp_axes[0])
+            return NamedSharding(mesh, P(*entries))
+        if name == "page_table":
+            return NamedSharding(mesh, P())
+        ax = paged_mod.pool_model_axes(name, leaf.ndim)
+        if ax is not None and leaf.shape[ax] % msize == 0 and \
+                leaf.shape[ax] >= msize:
+            entries[ax] = model_axis
+        return NamedSharding(mesh, P(*entries))
+
+    paths = jax.tree_util.tree_flatten_with_path(cache_structs)[0]
+    treedef = jax.tree.structure(cache_structs)
+    return jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
+
+
+# per-slot decode-state leaves with a leading batch (slot) axis; the rest
+# (threaded PRNG key, chunk counters) replicate. Name-driven because the
+# rng key's (2,) shape would otherwise look batch-like.
+_STATE_BATCH_KEYS = ("tokens", "positions", "active", "left", "eos", "draft")
+
+
+def decode_state_shardings(mesh: Mesh, batch: int,
+                           dp_axes: Tuple[str, ...]) -> Dict[str, Any]:
+    """Shardings for ``Model.init_decode_state``-shaped pytrees: the
+    per-slot vectors shard over the dp axes (when divisible); the rng key
+    and the on-device draft counters are replicated."""
+    bshard = NamedSharding(mesh, batch_pspec(mesh, batch, dp_axes, ndim=1))
+    rep = NamedSharding(mesh, P())
+    keys = _STATE_BATCH_KEYS + ("rng", "drafts", "accepted")
+    return {k: (bshard if k in _STATE_BATCH_KEYS else rep) for k in keys}
 
 
 def input_shardings(mesh: Mesh, input_structs, dp_axes: Tuple[str, ...],

@@ -18,6 +18,19 @@ pages + per-token scales, sized to the prompt's bucket rather than a full
 ``max_len`` ring), so ``cache_nbytes`` reports genuine wire bytes — about
 half the bf16 rows at equal token count, and far less than the dense
 engine's ``max_len``-slot handoff.
+
+**Cross-mesh disaggregation** (the paper's actual deployment: prefill
+EP32 vs decode EP320 are *different-sized* device groups): pass
+``ctx=`` (decode mesh) and/or ``prefill_ctx=`` (prefill mesh). With a
+separate ``prefill_ctx`` the pools become two engines over two meshes
+sharing one parameter set (each sharded per its own mesh's serving
+rules), and the handoff payload is staged through **host memory**
+(``jax.device_get``) between them — the explicit PCIe/DMA hop whose
+contention §4.5 flags; ``handoff_bytes`` is exactly what crosses it. The
+payload is mesh-shape-agnostic (a batch-1 cache pytree or a quantized
+page payload, no device axes), which is what lets a prefill mesh of one
+size feed a decode mesh of another. ``ctx=None`` + ``prefill_ctx=None``
+keeps the legacy single-process, single-mesh behavior bit-for-bit.
 """
 from __future__ import annotations
 
@@ -28,6 +41,7 @@ from typing import Deque, Dict, Optional
 import jax
 
 from repro.configs.base import ModelConfig
+from repro.parallel import context as pctx_mod
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -57,9 +71,14 @@ class Disaggregator:
                  chunk: int = 8, temperature: float = 0.0, top_k: int = 0,
                  paged: bool = False, page_size: int = 8,
                  pool_pages: Optional[int] = None,
-                 page_storage: str = "fp8"):
-        # one parameter set, two "deployments" (EP sizes are modeled for
-        # the perf benchmarks; compute here is the same process)
+                 page_storage: str = "fp8",
+                 ctx: Optional[pctx_mod.ParallelCtx] = None,
+                 prefill_ctx: Optional[pctx_mod.ParallelCtx] = None):
+        # one parameter set, two "deployments". Without a separate
+        # prefill_ctx, both pools are the same engine/process (EP sizes
+        # are modeled for the perf benchmarks); with one, the prefill
+        # pool is its own engine on its own mesh — prefill mesh and
+        # decode mesh may differ in size and shape.
         self.prefill_ep = prefill_ep
         self.decode_ep = decode_ep
         self.decode = ServeEngine(cfg, params=params, slots=decode_slots,
@@ -68,16 +87,47 @@ class Disaggregator:
                                   top_k=top_k, paged=paged,
                                   page_size=page_size,
                                   pool_pages=pool_pages,
-                                  page_storage=page_storage)
+                                  page_storage=page_storage, ctx=ctx)
+        if prefill_ctx is not None:
+            # share one parameter set across both meshes: hand the
+            # prefill engine a host copy so each pool device_puts the
+            # same values onto its own mesh's serving shardings
+            host_params = (params if params is not None
+                           else jax.device_get(self.decode.params))
+            # the prefill pool never admits: it only runs prefill +
+            # page-quantize, so give it an empty page pool (pool_pages=0
+            # allocates just the trash page) instead of duplicating the
+            # decode-sized K/V pool on the prefill mesh
+            self.prefill_pool = ServeEngine(
+                cfg, params=host_params, slots=1, max_len=max_len,
+                use_mtp=use_mtp, chunk=chunk, temperature=temperature,
+                top_k=top_k, paged=paged, page_size=page_size,
+                pool_pages=0 if paged else pool_pages,
+                page_storage=page_storage, ctx=prefill_ctx)
+        else:
+            self.prefill_pool = self.decode
         self.params = self.decode.params
         self.model = self.decode.model
         self.queue: Deque[Handoff] = collections.deque()
         self.handoff_bytes = 0
 
+    @property
+    def cross_mesh(self) -> bool:
+        """True when prefill and decode run as separate engines (possibly
+        on different meshes) and handoffs stage through host memory."""
+        return self.prefill_pool is not self.decode
+
     def submit(self, req: Request, extras: Optional[Dict] = None):
         """Run prefill (prefill pool) and queue the cache for decode."""
         self.decode._validate_paged(req)
-        first, cache1 = self.decode.prefill_request(req, extras)
+        first, cache1 = self.prefill_pool.prefill_request(req, extras)
+        if self.cross_mesh:
+            # the cross-mesh hop: the payload leaves the prefill mesh as
+            # host arrays (the PCIe/DMA transfer of §4.5) and is
+            # re-committed to the decode mesh at admission. The payload
+            # carries no device axes, so prefill mesh size != decode
+            # mesh size is fine by construction.
+            cache1 = jax.device_get(cache1)
         self.queue.append(Handoff(req, cache1, first, cache_nbytes(cache1)))
 
     def admit(self):

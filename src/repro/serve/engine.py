@@ -23,8 +23,30 @@ slot's still-running (masked) decode lane can never corrupt recycled
 pages. At ``page_storage="bf16"`` the paged engine's token streams are
 bitwise-identical to the dense engine's.
 
+``ctx=`` (a ``parallel.context.ParallelCtx`` with a mesh) makes the whole
+hot path **mesh-aware** (paper §MoE: prefill EP32 / decode EP320 — MoE's
+compute–communication trade-off only pays off when experts spread across
+devices): params are sharded per the inference rules
+(``sharding.serve_rules``: heads + dense matmuls TP over the model axis,
+experts EP), the dense cache per ``sharding.cache_pspecs`` (slots over
+dp, cache length over model) or the paged pools per
+``sharding.paged_cache_pspecs`` (K/V-head axis over model, page tables
+replicated, page allocator on host), and prefill / fused decode / slot
+admission all run as sharded jitted programs — the cache-carrying ones
+(decode, splice/scatter, release) with out-shardings pinned to their
+input shardings, so every dispatch sees identical shardings and the
+compile-once trace-count contract survives the mesh (prefill's outputs
+are per-request handoff payloads, left to GSPMD). MoE
+layers dispatch through ``parallel/ep``'s ``ep_flat``/``ep_dedup``
+shard_maps at the ctx wire precision; XLA's latency-hiding scheduler
+overlaps the decode all-to-alls with dense compute (the dependency
+freedom ``parallel/overlap`` documents — its HLO helpers measure the
+resulting wire bytes per step). ``ctx=None`` stays the zero-config
+single-device default, bitwise-unchanged.
+
 Throughput model and EP interplay live in ``network/perfmodel``;
-disaggregation in ``serve/disagg``.
+disaggregation (including cross-mesh prefill->decode handoff) in
+``serve/disagg``.
 """
 from __future__ import annotations
 
@@ -38,6 +60,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import Model, build_model
+from repro.parallel import context as pctx_mod
 
 # Smallest prefill bucket: prompts shorter than this share one compile.
 MIN_BUCKET = 8
@@ -109,9 +132,12 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  paged: bool = False, page_size: int = 8,
                  pool_pages: Optional[int] = None,
-                 page_storage: str = "fp8"):
+                 page_storage: str = "fp8",
+                 ctx: Optional[pctx_mod.ParallelCtx] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
+        self.ctx = ctx
+        self.meshed = ctx is not None and ctx.mesh is not None
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed)))
         self.slots = slots
@@ -138,6 +164,11 @@ class ServeEngine:
             self._aux_axes = self.model.paged_aux_axes()
         else:
             self.cache = self.model.init_cache(slots, max_len)
+        self._cache_shardings = None
+        self._state_shardings = None
+        self._tok_sharding = None
+        if self.meshed:
+            self._install_mesh()
         # host mirrors of the on-device per-slot state (int32: jnp.asarray
         # would silently downcast int64 under x64-disabled jax)
         self.positions = np.zeros((slots,), np.int32)   # next position
@@ -162,6 +193,11 @@ class ServeEngine:
         self._scatter_traces = 0
         self._release_traces = 0
         donate = jax.default_backend() != "cpu"
+        # meshed engines pin the cache/state out-shardings to the input
+        # shardings: without the pin, GSPMD could hand back a re-sharded
+        # cache and the next dispatch would see new input shardings and
+        # retrace — breaking the compile-once trace-count contract
+        cache_out = self._cache_shardings if self.meshed else None
         if paged:
             def quant(cache1):
                 self._quant_traces += 1
@@ -179,14 +215,16 @@ class ServeEngine:
                 return cache
 
             self._scatter_fn = jax.jit(
-                scatter, donate_argnums=(0,) if donate else ())
+                scatter, donate_argnums=(0,) if donate else (),
+                out_shardings=cache_out)
 
             def release(cache, slot):
                 self._release_traces += 1
                 return self.model.release_slot_pages(cache, slot)
 
             self._release_fn = jax.jit(
-                release, donate_argnums=(0,) if donate else ())
+                release, donate_argnums=(0,) if donate else (),
+                out_shardings=cache_out)
         else:
             axes = self.model.cache_batch_axes(slots, max_len)
 
@@ -195,17 +233,63 @@ class ServeEngine:
                 return _splice(big, small, slot, axes)
 
             self._splice_fn = jax.jit(
-                splice, donate_argnums=(0,) if donate else ())
+                splice, donate_argnums=(0,) if donate else (),
+                out_shardings=cache_out)
 
         def decode_chunk(params, cache, state):
             self._decode_traces += 1
             return self.model.decode_loop(
                 params, cache, state, self.chunk,
                 temperature=self.temperature, top_k=self.top_k,
-                use_mtp=self.use_mtp)
+                use_mtp=self.use_mtp, pctx=self.ctx)
 
+        decode_out = None
+        if self.meshed:
+            decode_out = (self._tok_sharding, self._tok_sharding,
+                          self._cache_shardings, self._state_shardings)
         self._decode_fn = jax.jit(
-            decode_chunk, donate_argnums=(1, 2) if donate else ())
+            decode_chunk, donate_argnums=(1, 2) if donate else (),
+            out_shardings=decode_out)
+
+    # -- mesh install --------------------------------------------------------
+    def _install_mesh(self):
+        """Shard the engine's whole working set over ``ctx.mesh``:
+
+        * params per ``sharding.serve_rules`` — heads / dense matmuls /
+          vocab TP over the model axis, experts EP on the model axis (the
+          paper's decode deployment: no cross-node TP, attention
+          data-parallel across the EP group);
+        * dense cache per ``sharding.cache_pspecs`` (slot axis over dp,
+          cache length over model), or the paged pools per
+          ``sharding.paged_cache_pspecs`` (KV-head axes over model,
+          scale sidebands + MLA latent pools + page table replicated —
+          the page *allocator* stays host-side either way);
+        * per-slot decode state per ``sharding.decode_state_shardings``
+          (slot vectors over dp, rng/counters replicated).
+        """
+        from jax.sharding import NamedSharding
+
+        from repro.parallel import sharding
+        ctx = self.ctx
+        mesh = ctx.mesh
+        rules = sharding.serve_rules("pod" in mesh.axis_names,
+                                     ep_ftp=getattr(ctx, "ep_ftp", False))
+        self._param_shardings = sharding.param_shardings(
+            mesh, self.model.specs(), rules)
+        self.params = jax.device_put(self.params, self._param_shardings)
+        model_axis = ctx.tp_axis or "model"
+        if self.paged:
+            self._cache_shardings = sharding.paged_cache_pspecs(
+                self.cache, mesh, ctx.dp_axes, model_axis)
+        else:
+            self._cache_shardings = sharding.cache_pspecs(
+                self.cache, mesh, ctx.dp_axes, model_axis)
+        self.cache = jax.device_put(self.cache, self._cache_shardings)
+        self._state_shardings = sharding.decode_state_shardings(
+            mesh, self.slots, ctx.dp_axes)
+        self._tok_sharding = NamedSharding(
+            mesh, sharding.batch_pspec(mesh, self.slots, ctx.dp_axes,
+                                       ndim=2))
 
     # -- introspection ------------------------------------------------------
     @property
@@ -227,6 +311,30 @@ class ServeEngine:
                 "scatter": self._scatter_traces,
                 "release": self._release_traces}
 
+    def decode_lowered_text(self) -> str:
+        """StableHLO text of the fused decode chunk at this engine's
+        shapes/shardings (``parallel/overlap.lowered_text``). Traces an
+        inspection copy — the decode trace counter is restored so the
+        compile-once contract stays assertable."""
+        from repro.parallel import overlap
+        n = self._decode_traces
+        try:
+            return overlap.lowered_text(self._decode_fn, self.params,
+                                        self.cache, self._device_state())
+        finally:
+            self._decode_traces = n
+
+    def decode_alltoall_bytes(self) -> int:
+        """All-to-all bytes per layer-scan iteration of one decode step,
+        read off the compiled lowering via
+        ``parallel/overlap.collective_bytes`` — the paper's §4.3
+        wire-byte accounting applied to the serving hot path (0 for
+        unmeshed/local-MoE engines). serve_bench records this per EP impl
+        so the ep_dedup < ep_flat claim is checkable from
+        BENCH_serve.json."""
+        from repro.parallel import overlap
+        return overlap.collective_bytes(self.decode_lowered_text())
+
     # -- prefill ------------------------------------------------------------
     def _get_prefill(self, bucket: int):
         """Jitted prefill for one static (bucket, extra_slots) shape."""
@@ -242,7 +350,7 @@ class ServeEngine:
                 batch = {"tokens": tokens}
                 batch.update(extras)
                 return self.model.prefill(params, batch, extra_slots=extra,
-                                          lengths=lengths)
+                                          lengths=lengths, pctx=self.ctx)
 
             fn = jax.jit(prefill)
             self._prefill_fns[bucket] = fn
@@ -403,7 +511,7 @@ class ServeEngine:
         # structure; pinned by a test) without paying its allocations —
         # donation invalidates reused buffers, so the chunk counters must
         # be fresh scalars each step anyway
-        return dict(
+        st = dict(
             tokens=jnp.asarray(self._tokens),
             positions=jnp.asarray(self.positions),
             active=jnp.asarray(np.array([r is not None
@@ -415,6 +523,11 @@ class ServeEngine:
             drafts=jnp.zeros((), jnp.int32),
             accepted=jnp.zeros((), jnp.int32),
         )
+        if self.meshed:
+            # commit the freshly-built host mirrors onto their mesh
+            # shardings so every dispatch sees identical input shardings
+            st = jax.device_put(st, self._state_shardings)
+        return st
 
     def step(self):
         """Refill slots from the pending queue, then run one fused

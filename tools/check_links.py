@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Markdown relative-link checker (CI gate for README.md / docs/*.md).
+
+Scans ``[text](target)`` links; external schemes (http/https/mailto) and
+pure in-page anchors are skipped, every other target is resolved relative
+to the file that links it (fragment stripped) and must exist on disk.
+Exits non-zero listing every dead link, so a doc rename or a typo'd
+cross-link fails CI instead of shipping a broken docs graph.
+
+    python tools/check_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:")
+
+
+def dead_links(path: str) -> list:
+    bad = []
+    with open(path, encoding="utf-8") as f:
+        txt = f.read()
+    for m in LINK.finditer(txt):
+        raw = m.group(1)
+        if raw.startswith(SKIP):
+            continue
+        tgt = raw.split("#", 1)[0]
+        if not tgt:                      # in-page anchor
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path) or ".", tgt))
+        if not os.path.exists(resolved):
+            bad.append((path, raw, resolved))
+    return bad
+
+
+def main(argv: list) -> int:
+    files = argv or ["README.md"]
+    bad = []
+    for f in files:
+        bad.extend(dead_links(f))
+    for path, raw, resolved in bad:
+        print(f"{path}: dead link '{raw}' (no such file: {resolved})")
+    if bad:
+        return 1
+    print(f"[check_links] {len(files)} files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
