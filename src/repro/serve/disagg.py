@@ -93,6 +93,8 @@ class Disaggregator:
             # prefill engine a host copy so each pool device_puts the
             # same values onto its own mesh's serving shardings
             host_params = (params if params is not None
+                           # repro-lint: disable=R1-host-sync -- one-time
+                           # engine construction, not the decode loop
                            else jax.device_get(self.decode.params))
             # the prefill pool never admits: it only runs prefill +
             # page-quantize, so give it an empty page pool (pool_pages=0
@@ -127,6 +129,8 @@ class Disaggregator:
             # re-committed to the decode mesh at admission. The payload
             # carries no device axes, so prefill mesh size != decode
             # mesh size is fine by construction.
+            # repro-lint: disable=R1-host-sync -- the documented §4.5
+            # PCIe hop: one staged host copy per handoff, by design
             cache1 = jax.device_get(cache1)
         self.queue.append(Handoff(req, cache1, first, cache_nbytes(cache1)))
 

@@ -204,7 +204,14 @@ class ServeEngine:
                 return self.model.prefill_to_pages(cache1, self.page_size,
                                                    self.page_storage)
 
-            self._quant_fn = jax.jit(quant)
+            # the bucket-shaped prefill cache is dead once quantized into
+            # the page wire payload, so donate it; the payload is a fresh
+            # structure whose pool shardings the out-pinned scatter jit
+            # imposes at admission — nothing to pin here
+            # repro-lint: disable=R2-jit-contract -- donated; output is
+            # the wire payload, not the pool cache
+            self._quant_fn = jax.jit(
+                quant, donate_argnums=(0,) if donate else ())
 
             def scatter(cache, pages, aux, ids, row, slot):
                 self._scatter_traces += 1
@@ -352,6 +359,11 @@ class ServeEngine:
                 return self.model.prefill(params, batch, extra_slots=extra,
                                           lengths=lengths, pctx=self.ctx)
 
+            # params are shared by every bucket jit and the next request,
+            # and tokens/lengths arrive as fresh host arrays: prefill has
+            # no donatable buffer; the batch-1 payload's shardings are
+            # imposed by the donated admission jits downstream
+            # repro-lint: disable=R2-jit-contract -- nothing round-trips
             fn = jax.jit(prefill)
             self._prefill_fns[bucket] = fn
         return fn
@@ -540,6 +552,9 @@ class ServeEngine:
             self.params, self.cache, self._device_state())
         self._rng = st["rng"]
         # single host sync per chunk: emitted tokens + updated slot state
+        # — THE allowlisted dispatch point (1/chunk dispatches per token,
+        # asserted by tests/test_serve_fused.py and BENCH_serve.json)
+        # repro-lint: disable=R1-host-sync -- the one sync per chunk
         toks, emitted, host = jax.device_get(
             (toks, emitted, {k: st[k] for k in
                              ("tokens", "positions", "active", "left",

@@ -75,6 +75,8 @@ def replica_step_times(out, mesh, dp_axes, t0: float,
 
     dev_t: Dict[int, float] = {}
     for sh in getattr(out, "addressable_shards", []):
+        # repro-lint: disable=R1-host-sync -- per-shard completion time
+        # is the straggler-detection measurement; syncing is the point
         sh.data.block_until_ready()
         dev_t[sh.device.id] = time.perf_counter() - t0
     if fallback is None:

@@ -326,6 +326,8 @@ class Trainer:
             times = fault_mod.replica_step_times(
                 metrics["loss"], self.ctx.mesh, self.ctx.dp_axes, t0)
         else:
+            # repro-lint: disable=R1-host-sync -- step-time observation
+            # IS the sync: once per step, outside the jitted step fn
             jax.block_until_ready(metrics["loss"])
             times = [time.perf_counter() - t0]
         if self._warmup_steps > 0:

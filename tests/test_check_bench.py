@@ -1,0 +1,91 @@
+"""Coverage for ``tools/check_bench.py`` — the benchmark schema +
+invariant gate that replaced the CI heredoc asserts. The committed
+BENCH_*.json artifacts must validate, and each invariant must actually
+fail when violated."""
+from __future__ import annotations
+
+import copy
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools import check_bench  # noqa: E402
+
+
+def load(name):
+    with open(REPO_ROOT / name, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def test_committed_artifacts_validate():
+    assert check_bench.validate_serve(load("BENCH_serve.json")) == []
+    assert check_bench.validate_train(load("BENCH_train.json")) == []
+
+
+def test_cli_on_committed_artifacts(capsys):
+    assert check_bench.main([str(REPO_ROOT / "BENCH_serve.json"),
+                             str(REPO_ROOT / "BENCH_train.json")]) == 0
+    assert "schema + invariants ok" in capsys.readouterr().out
+
+
+def test_fp8_bytes_ratio_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-fp8":
+            row["cache_bytes_ratio_vs_dense"] = 0.9
+    errs = check_bench.validate_serve(doc)
+    assert errs and any("exceeds 0.55" in e for e in errs)
+
+
+def test_bf16_parity_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-bf16":
+            row["tokens_equal_dense"] = False
+    errs = check_bench.validate_serve(doc)
+    assert any("bitwise-equal" in e for e in errs)
+
+
+def test_missing_schema_key_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    del doc["rows"][0]["tokens_per_s"]
+    errs = check_bench.validate_serve(doc)
+    assert any("missing keys" in e and "tokens_per_s" in e for e in errs)
+
+
+def test_sharded_rows_required_only_on_request():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    doc["rows"] = [r for r in doc["rows"]
+                   if r["cache_layout"] != "dense-sharded"]
+    assert check_bench.validate_serve(doc) == []
+    errs = check_bench.validate_serve(doc, require_sharded=True)
+    assert any("ep_flat+ep_dedup" in e for e in errs)
+
+
+def test_sharded_dedup_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row.get("moe_impl") == "ep_dedup":
+            row["decode_alltoall_bytes"] = 10 ** 12
+    errs = check_bench.validate_serve(doc)
+    assert any("0 < dedup < flat" in e for e in errs)
+
+
+def test_train_dedup_gate_fires():
+    doc = copy.deepcopy(load("BENCH_train.json"))
+    for row in doc["rows"]:
+        if row["impl"] == "ep_dedup":
+            row["alltoall_bytes"] = 10 ** 12
+    errs = check_bench.validate_train(doc)
+    assert any("0 < dedup < flat" in e for e in errs)
+
+
+def test_unknown_suite_rejected(tmp_path):
+    p = tmp_path / "weird.json"
+    p.write_text(json.dumps({"suite": "other", "rows": []}))
+    assert check_bench.check_file(str(p)) == ["unknown suite 'other'"]
+    assert check_bench.main([str(p)]) == 1

@@ -1,0 +1,94 @@
+"""Coverage for ``tools/check_links.py`` (the docs CI gate): valid
+relative links and anchors pass; a broken file link or a broken heading
+anchor fails, with tmp-dir doc trees."""
+from __future__ import annotations
+
+import pathlib
+import sys
+import textwrap
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools import check_links  # noqa: E402
+
+
+def write_docs(tmp_path, tree):
+    paths = {}
+    for rel, text in tree.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+        paths[rel] = str(p)
+    check_links._slug_cache.clear()
+    return paths
+
+
+GOOD_TARGET = """
+    # Paged FP8 Cache
+
+    ## 1. Fused multi-step decode: `Model.decode_loop`
+
+    body text
+
+    ## Scalar-prefetch kernels
+"""
+
+
+def test_valid_links_and_anchors_pass(tmp_path):
+    paths = write_docs(tmp_path, {
+        "docs/serving.md": GOOD_TARGET,
+        "README.md": """
+            # Top
+
+            ## Local Section
+
+            [serving](docs/serving.md)
+            [decode](docs/serving.md#1-fused-multi-step-decode-modeldecode_loop)
+            [kernels](docs/serving.md#scalar-prefetch-kernels)
+            [inpage](#local-section)
+            [external](https://example.com/nope#frag)
+        """})
+    assert check_links.dead_links(paths["README.md"]) == []
+    assert check_links.main([paths["README.md"],
+                             paths["docs/serving.md"]]) == 0
+
+
+def test_broken_relative_link_fails(tmp_path):
+    paths = write_docs(tmp_path, {
+        "README.md": "[gone](docs/renamed.md)\n"})
+    bad = check_links.dead_links(paths["README.md"])
+    assert len(bad) == 1 and "no such file" in bad[0][2]
+    assert check_links.main([paths["README.md"]]) == 1
+
+
+def test_broken_anchor_fails(tmp_path):
+    paths = write_docs(tmp_path, {
+        "docs/serving.md": GOOD_TARGET,
+        "README.md": """
+            [stale](docs/serving.md#4-paged-fp8-cache)
+            [inpage](#no-such-heading)
+        """})
+    bad = check_links.dead_links(paths["README.md"])
+    assert len(bad) == 2
+    assert all("slugs to" in why for _, _, why in bad)
+    assert check_links.main([paths["README.md"]]) == 1
+
+
+def test_anchor_slugging_rules(tmp_path):
+    paths = write_docs(tmp_path, {"doc.md": """
+        # §2.1.2 Low-precision KV / paged cache
+
+        ## Dup
+
+        ## Dup
+
+        ```bash
+        # not a heading: inside a code fence
+        ```
+    """})
+    anchors = check_links.heading_anchors(paths["doc.md"])
+    assert "212-low-precision-kv--paged-cache" in anchors
+    assert {"dup", "dup-1"} <= anchors
+    assert not any("not-a-heading" in a for a in anchors)

@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Schema + invariant validator for the committed benchmark artifacts.
+
+Replaces the copy-pasted heredoc assertion blocks that used to live in
+``.github/workflows/ci.yml``: the CI jobs (and anyone locally) run ::
+
+    python tools/check_bench.py BENCH_serve.json BENCH_train.json
+    python tools/check_bench.py --require-sharded BENCH_serve.json
+
+Checks two layers:
+
+* **schema** — every row carries the required keys for its family
+  (``cache_layout`` for serve rows, flat for train rows), so a bench
+  refactor that drops a column fails loudly instead of silently skipping
+  the gates that read it;
+* **invariants** — the paper-grounded performance gates: paged-fp8 cache
+  bytes <= 0.55x dense and >= 2x resident slots, paged-bf16 token streams
+  bitwise-equal to dense, sharded decode streams equal to the
+  single-device engine, and ``ep_dedup`` moving strictly fewer all-to-all
+  bytes than ``ep_flat`` (serve decode *and* train step).
+
+Stdlib-only so the CI lint job can gate on it before jax is installed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+SERVE_COMMON = ("arch", "family", "attention", "backend", "cache_layout",
+                "tokens_per_s", "requests", "slots", "chunk", "max_new",
+                "decode_tokens")
+SERVE_KEYS: Dict[str, tuple] = {
+    "dense": SERVE_COMMON + (
+        "decode_dispatches", "decode_dispatches_per_token", "decode_traces",
+        "prefill_traces", "prefill_buckets_compiled", "splice_traces",
+        "ttft_ms_mean", "ttft_ms_p50", "cache_bytes_per_token"),
+    "paged-bf16": SERVE_COMMON + (
+        "cache_bytes_per_token", "cache_bytes_ratio_vs_dense",
+        "resident_slots_ratio_vs_dense", "tokens_equal_dense",
+        "page_size", "pool_pages", "page_admits", "page_releases",
+        "pool_peak_occupancy", "pool_peak_pages_used",
+        "max_resident_slots_at_dense_budget", "mean_request_pages"),
+    "dense-sharded": SERVE_COMMON[:5] + (
+        "tokens_per_s", "slots", "chunk", "max_new", "decode_tokens",
+        "mesh_shape", "moe_impl", "wire", "decode_alltoall_bytes",
+        "tokens_equal_single_device"),
+}
+SERVE_KEYS["paged-fp8"] = SERVE_KEYS["paged-bf16"]
+
+TRAIN_KEYS = ("impl", "wire", "mesh", "batch", "seq", "steps",
+              "tokens_per_s", "step_ms", "alltoall_bytes", "alltoall_ops",
+              "loss_first", "loss_last", "backend")
+
+# the paper-grounded gates (see docs/serving.md §4, docs/training.md)
+FP8_MAX_BYTES_RATIO = 0.55     # paged-fp8 cache bytes vs dense bf16
+FP8_MIN_SLOTS_RATIO = 2.0      # paged-fp8 resident slots vs dense budget
+
+
+def _row_errors(row: dict, required: tuple, label: str) -> List[str]:
+    missing = [k for k in required if k not in row]
+    return [f"{label}: missing keys {missing}"] if missing else []
+
+
+def validate_serve(doc: dict, *, require_sharded: bool = False) -> List[str]:
+    errs: List[str] = []
+    rows = doc.get("rows")
+    if doc.get("suite") != "serve_bench" or not isinstance(rows, list):
+        return ["not a serve_bench document (suite/rows)"]
+    by = {}
+    for i, row in enumerate(rows):
+        layout = row.get("cache_layout")
+        label = f"rows[{i}] ({row.get('arch')}/{layout})"
+        req = SERVE_KEYS.get(layout)
+        if req is None:
+            errs.append(f"{label}: unknown cache_layout {layout!r}")
+            continue
+        errs.extend(_row_errors(row, req, label))
+        # arch-conditional columns: the Table-1 latent-KV byte accounting
+        # rides only on MLA rows; MTP counters only on MTP-headed archs
+        if layout == "dense" and row.get("attention") == "mla":
+            errs.extend(_row_errors(
+                row, ("kv_bytes_per_token_bf16", "kv_bytes_per_token_fp8"),
+                label + " [mla]"))
+        if layout == "dense" and ("mtp_drafts" in row
+                                  or "mtp_acceptance" in row):
+            errs.extend(_row_errors(
+                row, ("mtp_drafts", "mtp_acceptance"), label + " [mtp]"))
+        by[(row.get("arch"), layout)] = row
+        if row.get("tokens_per_s", 1) <= 0:
+            errs.append(f"{label}: tokens_per_s must be > 0")
+
+    # paged-vs-dense gates, per arch that has a dense row
+    for arch in {a for (a, l) in by if l == "dense"}:
+        dense = by[(arch, "dense")]
+        bf16 = by.get((arch, "paged-bf16"))
+        fp8 = by.get((arch, "paged-fp8"))
+        if bf16 is None or fp8 is None:
+            errs.append(f"{arch}: dense row without paged-bf16/paged-fp8 "
+                        "companion rows")
+            continue
+        if not (fp8["cache_bytes_per_token"]
+                < dense["cache_bytes_per_token"]):
+            errs.append(f"{arch}: paged-fp8 cache bytes/token not below "
+                        "dense")
+        if fp8["cache_bytes_ratio_vs_dense"] > FP8_MAX_BYTES_RATIO:
+            errs.append(
+                f"{arch}: paged-fp8 bytes ratio "
+                f"{fp8['cache_bytes_ratio_vs_dense']:.3f} exceeds "
+                f"{FP8_MAX_BYTES_RATIO} (paper §2.1.2 gate)")
+        if fp8["resident_slots_ratio_vs_dense"] < FP8_MIN_SLOTS_RATIO:
+            errs.append(
+                f"{arch}: paged-fp8 resident-slot ratio "
+                f"{fp8['resident_slots_ratio_vs_dense']:.2f} below "
+                f"{FP8_MIN_SLOTS_RATIO}")
+        if not bf16.get("tokens_equal_dense"):
+            errs.append(f"{arch}: paged-bf16 token streams diverge from "
+                        "dense (must be bitwise-equal)")
+
+    # sharded-decode gates (rows produced by the 8-device subprocess)
+    sharded = {r["moe_impl"]: r for r in rows
+               if r.get("cache_layout") == "dense-sharded"
+               and "moe_impl" in r}
+    if require_sharded and set(sharded) != {"ep_flat", "ep_dedup"}:
+        errs.append(f"sharded rows must cover ep_flat+ep_dedup, got "
+                    f"{sorted(sharded)}")
+    elif sharded and not require_sharded and \
+            set(sharded) != {"ep_flat", "ep_dedup"}:
+        errs.append(f"partial sharded row set {sorted(sharded)}")
+    if set(sharded) == {"ep_flat", "ep_dedup"}:
+        for impl, r in sharded.items():
+            if not r.get("tokens_equal_single_device"):
+                errs.append(f"sharded {impl}: token streams diverge from "
+                            "the single-device engine")
+        flat = sharded["ep_flat"]["decode_alltoall_bytes"]
+        dedup = sharded["ep_dedup"]["decode_alltoall_bytes"]
+        if not 0 < dedup < flat:
+            errs.append(f"decode a2a bytes: expected 0 < dedup < flat, "
+                        f"got dedup={dedup} flat={flat}")
+    return errs
+
+
+def validate_train(doc: dict) -> List[str]:
+    errs: List[str] = []
+    rows = doc.get("rows")
+    if doc.get("suite") != "train_bench" or not isinstance(rows, list):
+        return ["not a train_bench document (suite/rows)"]
+    by = {}
+    for i, row in enumerate(rows):
+        label = f"rows[{i}] ({row.get('impl')})"
+        errs.extend(_row_errors(row, TRAIN_KEYS, label))
+        by[row.get("impl")] = row
+        if row.get("tokens_per_s", 1) <= 0:
+            errs.append(f"{label}: tokens_per_s must be > 0")
+    if not {"ep_flat", "ep_dedup"} <= set(by):
+        errs.append(f"train rows must cover ep_flat+ep_dedup, got "
+                    f"{sorted(k for k in by if k)}")
+        return errs
+    flat = by["ep_flat"].get("alltoall_bytes", 0)
+    dedup = by["ep_dedup"].get("alltoall_bytes", 0)
+    if not 0 < dedup < flat:
+        errs.append(f"train a2a bytes: expected 0 < dedup < flat, got "
+                    f"dedup={dedup} flat={flat}")
+    if "dedup_bytes_reduction" not in doc:
+        errs.append("missing top-level dedup_bytes_reduction")
+    return errs
+
+
+def check_file(path: str, *, require_sharded: bool = False) -> List[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable ({e})"]
+    suite = doc.get("suite")
+    if suite == "serve_bench":
+        errs = validate_serve(doc, require_sharded=require_sharded)
+    elif suite == "train_bench":
+        errs = validate_train(doc)
+    else:
+        errs = [f"unknown suite {suite!r}"]
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate BENCH_serve.json / BENCH_train.json")
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--require-sharded", action="store_true",
+                    help="fail if serve docs lack the ep_flat/ep_dedup "
+                         "dense-sharded rows (the serve-distributed job)")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.files:
+        errs = check_file(path, require_sharded=args.require_sharded)
+        if errs:
+            failed = True
+            for e in errs:
+                print(f"{path}: {e}")
+        else:
+            print(f"[check_bench] {path}: schema + invariants ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

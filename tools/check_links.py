@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
-"""Markdown relative-link checker (CI gate for README.md / docs/*.md).
+"""Markdown relative-link + anchor checker (CI gate for README/docs).
 
-Scans ``[text](target)`` links; external schemes (http/https/mailto) and
-pure in-page anchors are skipped, every other target is resolved relative
-to the file that links it (fragment stripped) and must exist on disk.
-Exits non-zero listing every dead link, so a doc rename or a typo'd
-cross-link fails CI instead of shipping a broken docs graph.
+Scans ``[text](target)`` links; external schemes (http/https/mailto) are
+skipped, every other target is resolved relative to the file that links it
+and must exist on disk. Fragments are validated too: ``doc.md#some-anchor``
+(and in-page ``#anchor``) must match a GitHub-style slug of a heading in
+the target file — so renaming a section fails CI instead of shipping a
+link that silently scrolls to the top.
 
     python tools/check_links.py README.md docs/*.md
 """
@@ -14,12 +15,52 @@ from __future__ import annotations
 import os
 import re
 import sys
+from typing import Dict, List, Set
 
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*\S)\s*$")
 SKIP = ("http://", "https://", "mailto:")
 
+_slug_cache: Dict[str, Set[str]] = {}
 
-def dead_links(path: str) -> list:
+
+def github_slug(text: str) -> str:
+    """GitHub's heading -> anchor transform: strip markdown code/link
+    syntax, lowercase, drop punctuation, spaces become hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", text)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(path: str) -> Set[str]:
+    """All anchors a markdown file exposes (duplicate headings get the
+    GitHub ``-1``/``-2`` suffixes)."""
+    if path in _slug_cache:
+        return _slug_cache[path]
+    anchors: Set[str] = set()
+    counts: Dict[str, int] = {}
+    in_code = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if in_code:
+                continue
+            m = HEADING.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            anchors.add(slug if n == 0 else f"{slug}-{n}")
+    _slug_cache[path] = anchors
+    return anchors
+
+
+def dead_links(path: str) -> List[tuple]:
     bad = []
     with open(path, encoding="utf-8") as f:
         txt = f.read()
@@ -27,26 +68,32 @@ def dead_links(path: str) -> list:
         raw = m.group(1)
         if raw.startswith(SKIP):
             continue
-        tgt = raw.split("#", 1)[0]
-        if not tgt:                      # in-page anchor
-            continue
-        resolved = os.path.normpath(
+        tgt, _, frag = raw.partition("#")
+        resolved = (os.path.normpath(
             os.path.join(os.path.dirname(path) or ".", tgt))
+            if tgt else path)                 # in-page anchor
         if not os.path.exists(resolved):
-            bad.append((path, raw, resolved))
+            bad.append((path, raw, f"no such file: {resolved}"))
+            continue
+        if frag and resolved.endswith(".md"):
+            if frag.lower() not in heading_anchors(resolved):
+                bad.append((path, raw,
+                            f"no heading in {resolved} slugs to "
+                            f"'#{frag}'"))
     return bad
 
 
-def main(argv: list) -> int:
+def main(argv: List[str]) -> int:
     files = argv or ["README.md"]
     bad = []
     for f in files:
         bad.extend(dead_links(f))
-    for path, raw, resolved in bad:
-        print(f"{path}: dead link '{raw}' (no such file: {resolved})")
+    for path, raw, why in bad:
+        print(f"{path}: dead link '{raw}' ({why})")
     if bad:
         return 1
-    print(f"[check_links] {len(files)} files, all relative links resolve")
+    print(f"[check_links] {len(files)} files, all relative links + "
+          "anchors resolve")
     return 0
 
 

@@ -1,0 +1,24 @@
+"""repro-lint: JAX/Pallas-aware static analysis for this repo's
+performance contracts.
+
+The paper's wins (MLA paged decode, EP MoE, FP8 wire) only survive if
+invariants like "decode compiles once", "caches are donated", and "fp8
+values travel with their scales" hold on *every* path. The 8-device
+subprocess parity suite catches breaks at benchmark time; repro-lint
+catches the statically-visible ones at lint time, in seconds, with no
+jax import.
+
+Usage::
+
+    python -m tools.repro_lint src tests            # lint, exit 1 on hits
+    python -m tools.repro_lint --list-rules
+    python -m tools.repro_lint --select R3,R5 src   # subset of rules
+
+Rule catalog + waiver syntax: ``docs/static_analysis.md``.
+"""
+from .engine import (Diagnostic, Project, Rule, RunResult,  # noqa: F401
+                     SourceFile, run)
+from .rules import ALL_RULES  # noqa: F401
+
+__all__ = ["Diagnostic", "Project", "Rule", "RunResult", "SourceFile",
+           "run", "ALL_RULES"]

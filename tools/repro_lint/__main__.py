@@ -1,0 +1,52 @@
+"""CLI entry point: ``python -m tools.repro_lint [paths...]``.
+
+Emits one clickable ``path:line: RULE message`` diagnostic per finding
+and exits 1 if any survive waivers (the CI lint gate). Stdlib-only —
+runs before jax is installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .engine import run
+from .rules import ALL_RULES
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="static analysis of this repo's performance contracts")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names or prefixes "
+                         "(e.g. R3,R5-kernel-registry)")
+    ap.add_argument("--root", default=None,
+                    help="repo root for relative paths (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}: {rule.doc}")
+        return 0
+
+    select = ({s.strip() for s in args.select.split(",") if s.strip()}
+              if args.select else None)
+    result = run(args.paths or ["src", "tests"], ALL_RULES,
+                 root=args.root, select=select)
+    for err in result.errors:
+        print(f"repro-lint: error: {err}", file=sys.stderr)
+    for d in result.diagnostics:
+        print(d.render())
+    status = "FAIL" if result.diagnostics else "ok"
+    print(f"[repro-lint] {status}: {len(result.diagnostics)} finding(s), "
+          f"{result.waived} waived, {result.files} files")
+    return 1 if (result.diagnostics or result.errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,154 @@
+"""Shared AST helpers for repro-lint rules (stdlib only)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression: ``jax.lax.scan`` for the
+    ``Attribute`` chain, ``name`` for a bare ``Name``, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    if isinstance(node, ast.Call):
+        # e.g. jax.jit(fn)(args) -> dotted of the inner callee
+        return dotted(node.func)
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted(call.func)
+
+
+def walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def keyword_map(call: ast.Call) -> Dict[str, ast.expr]:
+    return {k.arg: k.value for k in call.keywords if k.arg is not None}
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """The values of a tuple/list literal whose elements are all str."""
+    if isinstance(node, (ast.Tuple, ast.List)) and node.elts:
+        vals = [const_str(e) for e in node.elts]
+        if all(v is not None for v in vals):
+            return tuple(vals)  # type: ignore[arg-type]
+    return None
+
+
+def functions(tree: ast.AST) -> List[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def enclosing_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    """child -> parent map (for finding a node's enclosing function)."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing_functions(node: ast.AST,
+                        parents: Dict[ast.AST, ast.AST]) -> List[ast.AST]:
+    """All FunctionDef/Lambda ancestors of ``node``, innermost first."""
+    out: List[ast.AST] = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            out.append(cur)
+        cur = parents.get(cur)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Traced-scope discovery (scan bodies, jitted functions)
+# ---------------------------------------------------------------------------
+
+_SCAN_CALLEES = ("scan", "fori_loop", "while_loop")
+
+
+def scan_body_functions(tree: ast.AST) -> Set[ast.AST]:
+    """Function/lambda nodes used as ``lax.scan``/``fori_loop``/
+    ``while_loop`` bodies anywhere in the module (matched by name for
+    ``lax.scan(step, ...)``; lambdas passed inline are caught directly)."""
+    body_names: Set[str] = set()
+    inline: Set[ast.AST] = set()
+    for call in walk_calls(tree):
+        name = call_name(call)
+        last = name.rsplit(".", 1)[-1]
+        if last not in _SCAN_CALLEES:
+            continue
+        # scan(body, ...) / fori_loop(lo, hi, body, ...) /
+        # while_loop(cond, body, ...): every function-valued positional
+        # argument is a traced body
+        for arg in call.args:
+            if isinstance(arg, ast.Name):
+                body_names.add(arg.id)
+            elif isinstance(arg, ast.Lambda):
+                inline.add(arg)
+    found = set(inline)
+    for fn in functions(tree):
+        if fn.name in body_names:
+            found.add(fn)
+    return found
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """Does this expression apply jax.jit (possibly via functools.partial)?"""
+    if isinstance(node, ast.Call):
+        name = dotted(node.func)
+        if name.rsplit(".", 1)[-1] == "jit":
+            return True
+        if name.rsplit(".", 1)[-1] == "partial" and node.args:
+            return _is_jit_expr(node.args[0]) or \
+                dotted(node.args[0]).rsplit(".", 1)[-1] == "jit"
+        return False
+    return dotted(node).rsplit(".", 1)[-1] == "jit"
+
+
+def jitted_functions(tree: ast.AST) -> Set[ast.AST]:
+    """Function nodes that end up inside a ``jax.jit`` trace: decorated
+    with jit / partial(jit, ...), or passed by name to a ``jax.jit(...)``
+    call in the same module, plus scan/loop bodies (always traced)."""
+    traced_names: Set[str] = set()
+    out: Set[ast.AST] = set()
+    for fn in functions(tree):
+        if any(_is_jit_expr(d) for d in fn.decorator_list):
+            out.add(fn)
+    for call in walk_calls(tree):
+        if dotted(call.func).rsplit(".", 1)[-1] == "jit":
+            for arg in call.args[:1]:
+                if isinstance(arg, ast.Name):
+                    traced_names.add(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    out.add(arg)
+    for fn in functions(tree):
+        if fn.name in traced_names:
+            out.add(fn)
+    out |= scan_body_functions(tree)
+    return out
+
+
+def nodes_in_functions(tree: ast.AST, fns: Set[ast.AST],
+                       parents: Dict[ast.AST, ast.AST]) -> Iterator[ast.AST]:
+    """Every node lexically inside one of ``fns``."""
+    for node in ast.walk(tree):
+        if any(f in fns for f in enclosing_functions(node, parents)):
+            yield node

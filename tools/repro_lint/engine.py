@@ -1,0 +1,213 @@
+"""repro-lint core: file model, waivers, rule protocol, runner.
+
+The framework is deliberately stdlib-only (``ast`` + ``fnmatch``): the CI
+lint job must be able to gate merges in seconds, before jax is even
+installed. Rules come in two shapes:
+
+* **file rules** — ``check_file(src, project)`` runs once per linted file
+  whose relative path matches the rule's ``include``/``exclude`` globs;
+* **project rules** — ``check_project(project)`` runs once with the whole
+  file set, for contracts that span modules (mesh-axis names declared in
+  ``parallel/context.py`` vs ``PartitionSpec`` call sites anywhere, the
+  kernel registry's three-backend convention, config fields vs
+  ``models/api.py`` consumption).
+
+Waivers
+-------
+A diagnostic is suppressed by a ``# repro-lint: disable=RULE`` comment
+(comma-separated rule names, or ``all``) either trailing the flagged line
+or standing alone on the line just above it. ``disable-file=RULE``
+anywhere in a file waives the whole file for those rules. Waivers are
+meant to carry a justification after ``--``::
+
+    toks = jax.device_get(out)  # repro-lint: disable=R1-host-sync -- the
+                                # one sync per chunk (docs/serving.md)
+
+Every waiver that fires is counted and reported, so the allowlist stays
+visible instead of rotting silently.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+WAIVER_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)=([A-Za-z0-9_,\-]+|all)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: ``path:line: RULE message`` (path repo-relative)."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """A parsed python file plus its waiver map."""
+
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        # line -> set of waived rule names ("all" waives every rule)
+        self.line_waivers: Dict[int, Set[str]] = {}
+        self.file_waivers: Set[str] = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = WAIVER_RE.search(line)
+            if not m:
+                continue
+            kind, names = m.group(1), {
+                n.strip() for n in m.group(2).split(",") if n.strip()}
+            if kind == "disable-file":
+                self.file_waivers |= names
+            else:
+                code = line[:m.start()].strip()
+                if code:
+                    target = i
+                else:
+                    # a standalone waiver comment covers the next code
+                    # line (further comment lines may carry the reason)
+                    target = i + 1
+                    while target <= len(self.lines) and \
+                            self.lines[target - 1].lstrip().startswith("#"):
+                        target += 1
+                self.line_waivers.setdefault(target, set()).update(names)
+
+    def waived(self, rule: str, line: int) -> bool:
+        for names in (self.file_waivers,
+                      self.line_waivers.get(line, ()),):
+            if "all" in names or rule in names or \
+                    any(rule.startswith(n) for n in names):
+                return True
+        return False
+
+    def segment(self, node: ast.AST) -> str:
+        """Source text of a node (for cheap textual sub-checks)."""
+        try:
+            return ast.get_source_segment(self.text, node) or ""
+        except Exception:  # pragma: no cover - malformed locations
+            return ""
+
+
+class Project:
+    """The full linted file set, addressable by relative-path glob."""
+
+    def __init__(self, root: str, files: Sequence[SourceFile]):
+        self.root = root
+        self.files = list(files)
+
+    def find(self, pattern: str) -> List[SourceFile]:
+        return [f for f in self.files if fnmatch.fnmatch(f.rel, pattern)]
+
+    def find_one(self, pattern: str) -> Optional[SourceFile]:
+        hits = self.find(pattern)
+        return hits[0] if hits else None
+
+
+class Rule:
+    """Base class: subclass, set ``name``/``include``/``exclude``, override
+    ``check_file`` and/or ``check_project``."""
+
+    name: str = "R0-unnamed"
+    #: one-line description, shown by ``--list-rules`` and the docs catalog
+    doc: str = ""
+    #: fnmatch globs on the repo-relative path; empty include = every file
+    include: Tuple[str, ...] = ()
+    exclude: Tuple[str, ...] = ()
+
+    def applies(self, rel: str) -> bool:
+        if self.include and not any(
+                fnmatch.fnmatch(rel, p) for p in self.include):
+            return False
+        return not any(fnmatch.fnmatch(rel, p) for p in self.exclude)
+
+    def check_file(self, src: SourceFile,
+                   project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+    def diag(self, src: SourceFile, node: ast.AST,
+             message: str) -> Diagnostic:
+        return Diagnostic(src.rel, getattr(node, "lineno", 1),
+                          self.name, message)
+
+
+def collect_py_files(paths: Sequence[str], root: str) -> List[str]:
+    """Expand files/dirs into a sorted .py file list (skips caches)."""
+    out: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            out.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(set(out))
+
+
+@dataclasses.dataclass
+class RunResult:
+    diagnostics: List[Diagnostic]
+    waived: int
+    files: int
+    errors: List[str]
+
+
+def run(paths: Sequence[str], rules: Sequence[Rule], *,
+        root: Optional[str] = None,
+        select: Optional[Set[str]] = None) -> RunResult:
+    """Lint ``paths`` with ``rules``; returns surviving diagnostics.
+
+    ``select`` restricts to rule names (prefix match, so ``R3`` selects
+    ``R3-pspec-axes``). Waived diagnostics are filtered and counted.
+    """
+    root = os.path.abspath(root or os.getcwd())
+    if select:
+        rules = [r for r in rules
+                 if r.name in select
+                 or any(r.name.startswith(s) for s in select)]
+    sources: List[SourceFile] = []
+    errors: List[str] = []
+    for path in collect_py_files(paths, root):
+        rel = os.path.relpath(path, root)
+        try:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            sources.append(SourceFile(path, rel, text))
+        except (OSError, SyntaxError, ValueError) as e:
+            errors.append(f"{rel}: unparseable ({e})")
+    project = Project(root, sources)
+    raw: List[Diagnostic] = []
+    for rule in rules:
+        for src in sources:
+            if rule.applies(src.rel):
+                raw.extend(rule.check_file(src, project))
+        raw.extend(rule.check_project(project))
+    by_rel = {s.rel: s for s in sources}
+    kept, waived = [], 0
+    for d in raw:
+        src = by_rel.get(d.path)
+        if src is not None and src.waived(d.rule, d.line):
+            waived += 1
+        else:
+            kept.append(d)
+    kept.sort(key=lambda d: (d.path, d.line, d.rule))
+    return RunResult(kept, waived, len(sources), errors)
