@@ -1,0 +1,219 @@
+"""Gateway fault-tolerance benchmark (ISSUE 7): goodput, TTFT, and
+SLO-attainment of the multi-replica serving gateway with and without an
+injected replica crash.
+
+Writes ``BENCH_gateway.json``::
+
+    PYTHONPATH=src python benchmarks/gateway_bench.py --out BENCH_gateway.json
+
+Two rows over an identical open-loop workload — Poisson arrivals
+(seeded ``RandomState``, so both scenarios see the same schedule) over a
+Zipf-reused prompt pool (prefix reuse makes the router's affinity hook
+measurable):
+
+* ``no-fault``  — the 2-replica pool undisturbed.
+* ``one-crash`` — same workload, same seeds, with ``crash:0`` injected
+  mid-run by ``serve/fault.py``. Residents of the dead replica are
+  retried on the survivor as continuations of their delivered prefix.
+
+Because every request's sampling keys are a pure function of (request
+seed, stream index), the crash run's delivered token streams must be
+**bitwise identical** to the no-fault run's (``outputs_equal_no_fault``)
+— the same invariant the chaos suite pins per-request, asserted here at
+workload scale. CI gates (``tools/check_bench.py``):
+
+* ``retry_count > 0`` and ``replica_deaths >= 1`` in the crash row (the
+  fault actually fired and the gateway actually recovered);
+* crash-row ``slo_attainment >= 0.9 x`` the no-fault row's — losing one
+  of two replicas costs capacity, not correctness, and the retry path
+  keeps the SLO cliff shallow;
+* ``outputs_equal_no_fault`` true in the crash row.
+
+All timing is in gateway *ticks* (the virtual scheduling clock), so the
+artifact is reproducible run-to-run on any host; wall seconds ride along
+unasserted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+ARCH = "qwen3-14b"           # GQA smoke config: fastest engine in the zoo
+REPLICAS = 3                 # lose 1 of 3 -> 33% capacity, not 50%
+SLOTS = 2
+CHUNK = 4
+MAX_LEN = 64
+MAX_NEW = 16                 # ~4 chunk-ticks of decode per request, so
+                             # the pool stays busy across the crash tick
+REQUESTS = 16
+ARRIVAL_RATE = 0.75          # mean new requests per tick (Poisson);
+                             # below the 2-survivor service rate so the
+                             # crash costs latency, not goodput
+ZIPF_A = 1.5                 # prompt-reuse skew
+PROMPT_POOL = 8              # distinct prompt prefixes
+CRASH_TICK = 6               # one-crash scenario: crash:0 fires here
+SLO_TTFT_TICKS = 12          # SLO bound on first-token latency, in ticks
+WORKLOAD_SEED = 1234         # arrival-process RandomState seed
+
+
+def _smoke_cfg():
+    from repro.configs.base import get_config, smoke_config
+    return smoke_config(get_config(ARCH))
+
+
+def _prompt_pool(cfg) -> list:
+    """Distinct prompt prefixes; Zipf reuse picks among these, so hot
+    prompts recur and exercise the router's prefix-affinity hook."""
+    return [(np.arange(4 + 2 * k) * (3 * k + 7)) % cfg.vocab_size
+            for k in range(PROMPT_POOL)]
+
+
+def _workload(cfg, requests: int):
+    """The open-loop request schedule: ``[(arrival_tick, prompt), ...]``.
+
+    Drawn from one seeded RandomState up front, so the no-fault and
+    one-crash scenarios replay byte-identical workloads."""
+    rs = np.random.RandomState(WORKLOAD_SEED)
+    pool = _prompt_pool(cfg)
+    sched = []
+    t = 0
+    while len(sched) < requests:
+        for _ in range(int(rs.poisson(ARRIVAL_RATE))):
+            if len(sched) >= requests:
+                break
+            k = (int(rs.zipf(ZIPF_A)) - 1) % len(pool)
+            sched.append((t, pool[k]))
+        t += 1
+    return sched
+
+
+def drive(cfg, params, *, injector=None, scenario: str,
+          requests: int = REQUESTS) -> tuple:
+    """Run one scenario: replay the workload through a fresh gateway
+    (same params, same per-request seeds) and report the row."""
+    import jax
+    from repro.serve.gateway import Gateway
+
+    gw = Gateway(cfg, params=params, replicas=REPLICAS, slots=SLOTS,
+                 max_len=MAX_LEN, chunk=CHUNK, max_pending=64,
+                 injector=injector)
+    sched = _workload(cfg, requests)
+    grs = []
+    tic = time.perf_counter()
+    while sched or gw.outstanding():
+        while sched and sched[0][0] <= gw.clock:
+            _, prompt = sched.pop(0)
+            grs.append(gw.submit(prompt, max_new=MAX_NEW))
+        gw.tick()
+        if gw.clock > 500:
+            raise RuntimeError(f"{scenario}: gateway stuck after 500 ticks")
+    wall = time.perf_counter() - tic
+
+    done = [g for g in grs if g.state == "done"]
+    ttfts = [g.first_token_tick - g.submitted_tick for g in done
+             if g.first_token_tick is not None]
+    within = sum(g.state == "done"
+                 and g.first_token_tick is not None
+                 and g.first_token_tick - g.submitted_tick <= SLO_TTFT_TICKS
+                 for g in grs)
+    row = {
+        "scenario": scenario,
+        "arch": ARCH,
+        "replicas": REPLICAS,
+        "slots": SLOTS,
+        "chunk": CHUNK,
+        "requests": len(grs),
+        "max_new": MAX_NEW,
+        "arrival_rate": ARRIVAL_RATE,
+        "zipf_a": ZIPF_A,
+        "crash_tick": CRASH_TICK if injector is not None else None,
+        "ticks": gw.clock,
+        "wall_s": wall,
+        "completed": gw.stats["completed"],
+        "failed": gw.stats["failed"],
+        "shed": gw.stats["shed"],
+        "timed_out": gw.stats["timed_out"],
+        "rejected": gw.stats["rejected"],
+        "retry_count": gw.stats["retries"],
+        "replica_deaths": gw.stats["replica_deaths"],
+        "affinity_hits": gw.stats["affinity_hits"],
+        "goodput_req_per_tick": gw.stats["completed"] / max(gw.clock, 1),
+        "ttft_ticks_p50": float(np.percentile(ttfts, 50)) if ttfts else None,
+        "ttft_ticks_p99": float(np.percentile(ttfts, 99)) if ttfts else None,
+        "slo_ttft_ticks": SLO_TTFT_TICKS,
+        "slo_attainment": within / max(len(grs), 1),
+        "backend": jax.default_backend(),
+    }
+    streams = [list(g.delivered) for g in grs]
+    return row, streams, gw.params
+
+
+def check(rows: list) -> None:
+    """The acceptance gates, asserted from the written rows (CI runs the
+    same asserts against the JSON via tools/check_bench.py)."""
+    by = {r["scenario"]: r for r in rows}
+    assert set(by) == {"no-fault", "one-crash"}, sorted(by)
+    nf, cr = by["no-fault"], by["one-crash"]
+    assert nf["completed"] == nf["requests"], \
+        f"no-fault run dropped requests: {nf}"
+    assert cr["retry_count"] > 0, "crash row must show retries"
+    assert cr["replica_deaths"] >= 1, "crash row must record the death"
+    assert cr["outputs_equal_no_fault"], \
+        "crash-run token streams diverged from the no-fault run"
+    assert cr["slo_attainment"] >= 0.9 * nf["slo_attainment"], \
+        (cr["slo_attainment"], nf["slo_attainment"])
+
+
+def run(out: str | None = None) -> list:
+    from repro.serve.fault import ServeFaultInjector
+
+    cfg = _smoke_cfg()
+    nf_row, nf_streams, params = drive(cfg, None, injector=None,
+                                       scenario="no-fault")
+    cr_row, cr_streams, _ = drive(
+        cfg, params, injector=ServeFaultInjector({CRASH_TICK: "crash:0"}),
+        scenario="one-crash")
+    cr_row["outputs_equal_no_fault"] = cr_streams == nf_streams
+    rows = [nf_row, cr_row]
+    check(rows)
+    if out:
+        with open(out, "w") as f:
+            json.dump({"suite": "gateway_bench", "rows": rows}, f, indent=2)
+    return rows
+
+
+def suite():
+    """benchmarks/run.py hook: (name, us_per_call, derived) rows."""
+    for r in run(out="BENCH_gateway.json"):
+        us = (r["wall_s"] / max(r["ticks"], 1)) * 1e6
+        yield (f"gateway_{r['scenario']}", us,
+               f"goodput={r['goodput_req_per_tick']:.3f}req/tick "
+               f"ttft_p99={r['ttft_ticks_p99']} "
+               f"slo={r['slo_attainment']:.2f} retries={r['retry_count']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_gateway.json")
+    args = ap.parse_args()
+    for r in run(out=args.out):
+        print(f"[gateway_bench] {r['scenario']}: "
+              f"{r['completed']}/{r['requests']} done in {r['ticks']} "
+              f"ticks, goodput {r['goodput_req_per_tick']:.3f} req/tick, "
+              f"TTFT p50/p99 {r['ttft_ticks_p50']}/{r['ttft_ticks_p99']} "
+              f"ticks, SLO({r['slo_ttft_ticks']}t) "
+              f"{r['slo_attainment']:.2f}, retries {r['retry_count']}, "
+              f"deaths {r['replica_deaths']}, "
+              f"affinity {r['affinity_hits']}")
+    print(f"[gateway_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

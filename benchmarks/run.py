@@ -2,13 +2,16 @@
 # The serve_bench suite additionally writes BENCH_serve.json (tokens/s,
 # TTFT, dispatches/token for the fused serving engine); train_bench
 # writes BENCH_train.json (meshed train step tokens/s + ep_flat-vs-
-# ep_dedup all-to-all wire bytes, measured in an 8-device subprocess).
+# ep_dedup all-to-all wire bytes, measured in an 8-device subprocess);
+# gateway_bench writes BENCH_gateway.json (multi-replica goodput/SLO
+# with and without an injected replica crash).
 import sys
 
 sys.path.insert(0, "src")
 
 
 def main() -> None:
+    from benchmarks import gateway_bench
     from benchmarks import paper_tables as pt
     from benchmarks import serve_bench
     from benchmarks import train_bench
@@ -25,6 +28,7 @@ def main() -> None:
         pt.ep_dedup_bytes,
         serve_bench.suite,
         train_bench.suite,
+        gateway_bench.suite,
     ]
     print("name,us_per_call,derived")
     for suite in suites:

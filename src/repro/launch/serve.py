@@ -14,6 +14,15 @@ swaps in the paged block-pool cache (docs/serving.md §4): page-granular
 admission plus FP8 page storage; the pool occupancy and bytes/token are
 printed alongside the dispatch stats.
 
+``--gateway N`` serves the request stream through N in-process engine
+replicas (one shared parameter set) behind the fault-tolerant gateway
+(docs/serving.md §6): health-checked least-loaded routing, idempotent
+retry, load shedding. ``--chaos "6=crash:0,9=slow:1"`` injects faults on
+the gateway's tick clock (kinds: crash, hang, slow, flaky-admit — the
+``tick=kind[:replica]`` grammar is ``repro/faultspec.py``'s, shared with
+the training launcher's ``--chaos``); the run prints goodput, retries,
+and per-replica health so recovery is visible from the CLI.
+
 ``--mesh D,M`` runs the whole hot path sharded over a ``(data, model)``
 mesh (docs/serving.md §5): params per the serving inference rules,
 batch/slots over ``data``, heads + experts over ``model``, with
@@ -69,6 +78,15 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None)
     ap.add_argument("--page-storage", default="fp8",
                     choices=("fp8", "bf16"))
+    ap.add_argument("--gateway", type=int, default=0, metavar="N",
+                    help="serve through N engine replicas behind the "
+                         "fault-tolerant gateway (docs/serving.md §6)")
+    ap.add_argument("--chaos", default=None, metavar="T=KIND[:R],..",
+                    help="gateway only: inject faults on the tick clock, "
+                         "e.g. '6=crash:0,9=slow:1' (kinds: crash, hang, "
+                         "slow, flaky-admit)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="gateway only: re-dispatch budget per request")
     ap.add_argument("--mesh", default=None, metavar="D,M",
                     help="shard serving over a (data, model) mesh, e.g. "
                          "'2,4' (default: single-device)")
@@ -97,6 +115,44 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
+
+    if args.chaos and not args.gateway:
+        raise SystemExit("--chaos only applies with --gateway")
+    if args.gateway:
+        if args.disagg or args.mesh:
+            raise SystemExit("--gateway replicas are single-device "
+                             "engines (no --disagg/--mesh)")
+        from repro import faultspec
+        from repro.serve.fault import ServeFaultInjector
+        from repro.serve.gateway import Gateway
+
+        injector = None
+        if args.chaos:
+            schedule = faultspec.parse_schedule(args.chaos,
+                                                faultspec.SERVE_KINDS)
+            injector = ServeFaultInjector(schedule)
+        gw = Gateway(cfg, replicas=args.gateway, slots=args.slots,
+                     max_len=args.max_len, chunk=args.chunk,
+                     temperature=args.temperature, top_k=args.top_k,
+                     max_retries=args.max_retries, injector=injector,
+                     **paged_kw)
+        grs = [gw.submit((np.arange(5 + i * 2) * (i + 3)) % cfg.vocab_size,
+                         max_new=args.max_new)
+               for i in range(args.requests)]
+        gw.run_until_done()
+        s = gw.stats
+        print(f"[serve] gateway x{args.gateway}: "
+              f"{s['completed']}/{s['submitted']} done in {s['ticks']} "
+              f"ticks, retries {s['retries']}, deaths "
+              f"{s['replica_deaths']}, shed {s['shed']}, timed_out "
+              f"{s['timed_out']}, affinity {s['affinity_hits']}")
+        print(f"[serve] replica health: {gw.registry.states()}")
+        if injector is not None and injector.events:
+            print(f"[serve] chaos fired: {injector.events}")
+        for g in grs[:3]:
+            print(f"  req {g.gid}: prompt {list(g.prompt[:6])}... -> "
+                  f"{g.delivered[:args.max_new]} [{g.state}]")
+        return
 
     reqs = [Request(i, (np.arange(5 + i * 2) * (i + 3)) % cfg.vocab_size,
                     max_new=args.max_new) for i in range(args.requests)]

@@ -681,8 +681,13 @@ class Model:
         tokens/positions: last emitted token and its next position per slot.
         active: slot occupancy mask. left: decode-token budget (max-len
         masking). eos: per-slot EOS id (-1 = none). draft: MTP draft of the
-        next token (-1 = no outstanding draft). drafts/accepted: on-device
-        speculative-decoding counters for this chunk.
+        next token (-1 = no outstanding draft). rngs: per-slot PRNG *base*
+        key (the request's sampling identity — retries re-derive the same
+        stream); tix: per-slot sample index, folded into the base key each
+        step so token t of a request is always sampled with
+        ``fold_in(base, t)`` regardless of which slot/replica/chunk runs
+        it. drafts/accepted: on-device speculative-decoding counters for
+        this chunk.
         """
         B = batch
         return dict(
@@ -692,7 +697,8 @@ class Model:
             left=jnp.zeros((B,), jnp.int32),
             eos=-jnp.ones((B,), jnp.int32),
             draft=-jnp.ones((B,), jnp.int32),
-            rng=jax.random.PRNGKey(seed),
+            rngs=jax.random.split(jax.random.PRNGKey(seed), B),
+            tix=jnp.zeros((B,), jnp.int32),
             drafts=jnp.zeros((), jnp.int32),
             accepted=jnp.zeros((), jnp.int32),
         )
@@ -703,8 +709,9 @@ class Model:
         """Run ``k`` fused decode steps under one ``lax.scan``.
 
         Everything the per-token host loop used to do round-trips for
-        happens on device: sampling (greedy, or temperature/top-k via the
-        threaded PRNG key), per-slot EOS + budget masking, and — when
+        happens on device: sampling (greedy, or temperature/top-k via
+        per-slot request-seeded PRNG keys — see ``init_decode_state``),
+        per-slot EOS + budget masking, and — when
         ``use_mtp`` — the MTP draft for the next step plus draft-acceptance
         counting. One dispatch emits up to ``B*k`` tokens.
 
@@ -742,8 +749,12 @@ class Model:
             eos, draft = st["eos"], st["draft"]
             logits, cache = self.decode_step(params, cache, tok[:, None],
                                              pos[:, None])
-            key, sub = jax.random.split(st["rng"])
-            nxt = sample(logits[:, 0], sub)
+            # per-slot sampling keys: fold the slot's sample index into its
+            # request-scoped base key, so the token at stream index t is a
+            # pure function of (request seed, t) — a retried request
+            # re-dispatched on another replica reproduces its stream
+            keys = jax.vmap(jax.random.fold_in)(st["rngs"], st["tix"])
+            nxt = jax.vmap(sample)(logits[:, 0], keys)
             # speculative accounting: did the previous step's draft match?
             has_draft = active & (draft >= 0)
             drafts = st["drafts"] + has_draft.sum(dtype=jnp.int32)
@@ -764,8 +775,9 @@ class Model:
             else:
                 draft2 = jnp.full_like(draft, -1)
             st2 = dict(tokens=tok2, positions=pos2, active=active2,
-                       left=left2, eos=eos, draft=draft2, rng=key,
-                       drafts=drafts, accepted=accepted)
+                       left=left2, eos=eos, draft=draft2, rngs=st["rngs"],
+                       tix=st["tix"] + active, drafts=drafts,
+                       accepted=accepted)
             return (cache, st2), (emitted, active)
 
         (cache, state), (toks, was_active) = jax.lax.scan(

@@ -279,21 +279,26 @@ def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
     return jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
 
 
-# per-slot decode-state leaves with a leading batch (slot) axis; the rest
-# (threaded PRNG key, chunk counters) replicate. Name-driven because the
-# rng key's (2,) shape would otherwise look batch-like.
-_STATE_BATCH_KEYS = ("tokens", "positions", "active", "left", "eos", "draft")
+# per-slot decode-state leaves with a leading batch (slot) axis; the
+# chunk counters replicate. Name-driven because scalar counters would
+# otherwise be ambiguous against 1-d slot vectors.
+_STATE_BATCH_KEYS = ("tokens", "positions", "active", "left", "eos",
+                     "draft", "tix")
 
 
 def decode_state_shardings(mesh: Mesh, batch: int,
                            dp_axes: Tuple[str, ...]) -> Dict[str, Any]:
     """Shardings for ``Model.init_decode_state``-shaped pytrees: the
-    per-slot vectors shard over the dp axes (when divisible); the rng key
-    and the on-device draft counters are replicated."""
+    per-slot vectors — including the (B, 2) per-slot sampling keys and
+    the (B,) stream indices — shard over the dp axes (when divisible);
+    the on-device draft counters are replicated."""
     bshard = NamedSharding(mesh, batch_pspec(mesh, batch, dp_axes, ndim=1))
     rep = NamedSharding(mesh, P())
-    keys = _STATE_BATCH_KEYS + ("rng", "drafts", "accepted")
-    return {k: (bshard if k in _STATE_BATCH_KEYS else rep) for k in keys}
+    out = {k: (bshard if k in _STATE_BATCH_KEYS else rep)
+           for k in _STATE_BATCH_KEYS + ("drafts", "accepted")}
+    out["rngs"] = NamedSharding(
+        mesh, batch_pspec(mesh, batch, dp_axes, ndim=2, seq_axis=None))
+    return out
 
 
 def input_shardings(mesh: Mesh, input_structs, dp_axes: Tuple[str, ...],

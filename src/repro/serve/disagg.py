@@ -42,7 +42,7 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.parallel import context as pctx_mod
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import AdmissionError, Request, ServeEngine
 
 
 def cache_nbytes(cache) -> int:
@@ -72,6 +72,7 @@ class Disaggregator:
                  paged: bool = False, page_size: int = 8,
                  pool_pages: Optional[int] = None,
                  page_storage: str = "fp8",
+                 max_queue: Optional[int] = None,
                  ctx: Optional[pctx_mod.ParallelCtx] = None,
                  prefill_ctx: Optional[pctx_mod.ParallelCtx] = None):
         # one parameter set, two "deployments". Without a separate
@@ -111,6 +112,7 @@ class Disaggregator:
         self.params = self.decode.params
         self.model = self.decode.model
         self.queue: Deque[Handoff] = collections.deque()
+        self.max_queue = max_queue
         self.handoff_bytes = 0
 
     @property
@@ -120,8 +122,18 @@ class Disaggregator:
         return self.prefill_pool is not self.decode
 
     def submit(self, req: Request, extras: Optional[Dict] = None):
-        """Run prefill (prefill pool) and queue the cache for decode."""
+        """Run prefill (prefill pool) and queue the cache for decode.
+        With ``max_queue`` set, a full handoff queue raises
+        ``AdmissionError`` *before* spending prefill compute on a request
+        the decode pool can't accept — backpressure at the cheapest
+        point."""
         self.decode._validate_paged(req)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise AdmissionError(
+                f"handoff queue full: request {req.rid} rejected; "
+                f"{len(self.queue)} prefilled handoffs queued >= max_queue "
+                f"({self.max_queue}) — drive step() to drain the decode "
+                "pool first")
         first, cache1 = self.prefill_pool.prefill_request(req, extras)
         if self.cross_mesh:
             # the cross-mesh hop: the payload leaves the prefill mesh as

@@ -66,6 +66,13 @@ from repro.parallel import context as pctx_mod
 MIN_BUCKET = 8
 
 
+class AdmissionError(RuntimeError):
+    """Typed capacity rejection: no free slot/page for immediate admission,
+    or the bounded pending queue is full. Subclasses RuntimeError so
+    pre-gateway callers keep working; the gateway catches it and converts
+    it into backpressure (route elsewhere, shed, or reject upstream)."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -73,6 +80,17 @@ class Request:
     max_new: int = 16            # new tokens after the prompt (the
                                  # prefill-produced first token counts)
     eos: Optional[int] = None
+    seed: Optional[int] = None   # per-request sampling seed: token t of
+                                 # the stream is sampled with
+                                 # fold_in(PRNGKey(seed), t) regardless of
+                                 # which slot/engine runs it, so a retried
+                                 # request reproduces bitwise (None =
+                                 # engine-rng, non-reproducible across
+                                 # re-dispatch)
+    sample_offset: int = 0       # stream index of the first token this
+                                 # admission produces; a gateway retry
+                                 # re-prefills prompt+delivered and sets
+                                 # this to len(delivered)
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -133,6 +151,7 @@ class ServeEngine:
                  paged: bool = False, page_size: int = 8,
                  pool_pages: Optional[int] = None,
                  page_storage: str = "fp8",
+                 max_pending: Optional[int] = None,
                  ctx: Optional[pctx_mod.ParallelCtx] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -176,9 +195,15 @@ class ServeEngine:
         self._left = np.zeros((slots,), np.int32)       # decode budget
         self._eos = np.full((slots,), -1, np.int32)
         self._draft = np.full((slots,), -1, np.int32)
+        # per-slot sampling PRNG: base key + next stream index. Sampling
+        # key for a token is fold_in(rngs[i], tix[i]) — a pure function of
+        # (request seed, stream position), so retried requests reproduce
+        self._rngs = np.zeros((slots, 2), np.uint32)
+        self._tix = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.pending: Deque[Tuple[Request, Optional[Dict]]] = \
             collections.deque()
+        self.max_pending = max_pending
         self._rng = jax.random.PRNGKey(seed + 1)
         self.stats = {"steps": 0, "tokens": 0, "accepted_drafts": 0,
                       "drafts": 0, "dispatches": 0, "prefills": 0,
@@ -272,7 +297,8 @@ class ServeEngine:
           scale sidebands + MLA latent pools + page table replicated —
           the page *allocator* stays host-side either way);
         * per-slot decode state per ``sharding.decode_state_shardings``
-          (slot vectors over dp, rng/counters replicated).
+          (slot vectors + per-slot sampling keys over dp, chunk counters
+          replicated).
         """
         from jax.sharding import NamedSharding
 
@@ -389,9 +415,15 @@ class ServeEngine:
         if self.paged:
             self.stats["dispatches"] += 1
             cache1 = self._quant_fn(cache1)
-        # first token follows the same sampling policy as the fused loop
+        # first token follows the same sampling policy as the fused loop:
+        # stream index ``sample_offset`` of the request's seeded stream
+        # (engine-rng split for seedless requests)
         from repro.models.api import sample_logits
-        self._rng, sub = jax.random.split(self._rng)
+        if req.seed is not None:
+            sub = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                     req.sample_offset)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
         first = int(sample_logits(logits[0, -1], sub, self.temperature,
                                   self.top_k))
         return first, cache1
@@ -435,8 +467,17 @@ class ServeEngine:
 
     def submit(self, req: Request, extras: Optional[Dict] = None):
         """Queue a request; ``step()`` admits it when a slot — and, for
-        paged engines, enough pool pages — free up."""
+        paged engines, enough pool pages — free up. With ``max_pending``
+        set, a full queue raises ``AdmissionError`` (explicit
+        backpressure) instead of growing without bound; rejection never
+        reorders what was already queued."""
         self._validate_paged(req)
+        if (self.max_pending is not None
+                and len(self.pending) >= self.max_pending):
+            raise AdmissionError(
+                f"pending queue full: request {req.rid} rejected; "
+                f"{len(self.pending)} queued >= max_pending "
+                f"({self.max_pending}) — drive step() or route elsewhere")
         self.pending.append((req, extras))
 
     def add_request(self, req: Request, extras: Optional[Dict] = None):
@@ -444,7 +485,7 @@ class ServeEngine:
         self._validate_paged(req)
         free = self.free_slots()
         if not free:
-            raise RuntimeError(
+            raise AdmissionError(
                 f"no free slots: all {self.slots} slots are occupied; "
                 "call step() until a request completes before admitting "
                 "more, or use submit() to queue (see free_slots())")
@@ -468,7 +509,7 @@ class ServeEngine:
             # leaves the request/stats re-admittable as-is
             n = self.pages_needed(req)
             if n > len(self._free_pages):
-                raise RuntimeError(
+                raise AdmissionError(
                     f"no free pages: request {req.rid} needs {n}, pool has "
                     f"{len(self._free_pages)} of {self.pool_pages}; drive "
                     "step() until a request completes, or submit() to "
@@ -506,6 +547,13 @@ class ServeEngine:
         self._left[slot] = req.max_new - 1
         self._eos[slot] = -1 if req.eos is None else req.eos
         self._draft[slot] = -1
+        if req.seed is not None:
+            base = jax.random.PRNGKey(req.seed)
+        else:
+            self._rng, base = jax.random.split(self._rng)
+        self._rngs[slot] = np.asarray(base, np.uint32)
+        self._tix[slot] = req.sample_offset + 1   # prefill consumed
+                                                  # stream index offset
         self.active[slot] = req
 
     def _admit_pending(self):
@@ -531,7 +579,8 @@ class ServeEngine:
             left=jnp.asarray(self._left),
             eos=jnp.asarray(self._eos),
             draft=jnp.asarray(self._draft),
-            rng=self._rng,
+            rngs=jnp.asarray(self._rngs),
+            tix=jnp.asarray(self._tix),
             drafts=jnp.zeros((), jnp.int32),
             accepted=jnp.zeros((), jnp.int32),
         )
@@ -550,7 +599,6 @@ class ServeEngine:
         self.stats["dispatches"] += 1
         toks, emitted, self.cache, st = self._decode_fn(
             self.params, self.cache, self._device_state())
-        self._rng = st["rng"]
         # single host sync per chunk: emitted tokens + updated slot state
         # — THE allowlisted dispatch point (1/chunk dispatches per token,
         # asserted by tests/test_serve_fused.py and BENCH_serve.json)
@@ -558,7 +606,7 @@ class ServeEngine:
         toks, emitted, host = jax.device_get(
             (toks, emitted, {k: st[k] for k in
                              ("tokens", "positions", "active", "left",
-                              "draft", "drafts", "accepted")}))
+                              "draft", "tix", "drafts", "accepted")}))
         self.stats["steps"] += int(emitted.any(axis=0).sum())
         self.stats["drafts"] += int(host["drafts"])
         self.stats["accepted_drafts"] += int(host["accepted"])
@@ -567,6 +615,7 @@ class ServeEngine:
         self.positions = np.array(host["positions"])
         self._left = np.array(host["left"])
         self._draft = np.array(host["draft"])
+        self._tix = np.array(host["tix"])
         for i, r in enumerate(self.active):
             if r is None:
                 continue
@@ -575,16 +624,35 @@ class ServeEngine:
             self.stats["tokens"] += int(new.size)
             if not host["active"][i]:
                 r.done = True
-                self.active[i] = None
-                if self.paged and self._slot_pages[i]:
-                    # recycle: pages back to the pool; the slot's table
-                    # row is re-pointed at the trash page so its masked
-                    # decode lane can't write into a new owner's pages
-                    self._free_pages.extend(self._slot_pages[i])
-                    self._slot_pages[i] = []
-                    self.stats["dispatches"] += 1
-                    self.stats["page_releases"] += 1
-                    self.cache = self._release_fn(self.cache, i)
+                self._release_slot(i)
+
+    def _release_slot(self, slot: int):
+        """Free ``slot``: clear occupancy and (paged) recycle its pages —
+        the slot's table row is re-pointed at the trash page so its masked
+        decode lane can't write into a new owner's pages."""
+        self.active[slot] = None
+        if self.paged and self._slot_pages[slot]:
+            self._free_pages.extend(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            self.stats["dispatches"] += 1
+            self.stats["page_releases"] += 1
+            self.cache = self._release_fn(self.cache, slot)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request by id: drop it from the pending queue, or free
+        its slot (pages recycled; the lane is masked out of the next
+        dispatch). The Request object is left as-is — ``done`` stays
+        False, ``out`` keeps whatever was delivered — so a gateway can
+        re-dispatch it as a continuation. Returns False if unknown."""
+        for i, (req, _) in enumerate(self.pending):
+            if req.rid == rid:
+                del self.pending[i]
+                return True
+        for slot, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                self._release_slot(slot)
+                return True
+        return False
 
     def pool_stats(self) -> Dict[str, Any]:
         """Page-pool occupancy (zeros for dense engines)."""

@@ -19,6 +19,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro import faultspec
+
 
 class NodeFailure(RuntimeError):
     """Simulated node/interconnect failure."""
@@ -48,8 +50,8 @@ class FailureInjector:
         than fabricating a timing vector."""
         kind = self.schedule.get(step)
         if kind and kind.startswith("slow"):
-            parts = kind.split(":")
-            return int(parts[1]) if len(parts) > 1 else 0
+            fs = faultspec.parse_spec(kind, faultspec.TRAIN_KINDS)
+            return fs.replica if fs.replica is not None else 0
         return None
 
 

@@ -1,0 +1,58 @@
+"""Shared fault-spec grammar (repro/faultspec.py): the one parser behind
+the train and serve injectors and the --chaos CLI flags."""
+import pytest
+
+from repro import faultspec
+from repro.faultspec import FaultSpec, parse_schedule, parse_spec
+
+
+class TestParseSpec:
+    def test_kind_only(self):
+        assert parse_spec("node") == FaultSpec("node", None)
+
+    def test_kind_with_replica(self):
+        assert parse_spec("slow:3") == FaultSpec("slow", 3)
+        assert parse_spec("crash:0") == FaultSpec("crash", 0)
+        assert parse_spec("flaky-admit:2") == FaultSpec("flaky-admit", 2)
+
+    def test_roundtrip_str(self):
+        for s in ("node", "slow:3", "flaky-admit:0"):
+            assert str(parse_spec(s)) == s
+
+    def test_kind_vocabulary_enforced(self):
+        assert parse_spec("slow:1", faultspec.TRAIN_KINDS).replica == 1
+        assert parse_spec("hang:1", faultspec.SERVE_KINDS).kind == "hang"
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            parse_spec("hang:1", faultspec.TRAIN_KINDS)
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            parse_spec("sdc", faultspec.SERVE_KINDS)
+
+    @pytest.mark.parametrize("bad", ["", ":3", "slow:3:4", "slow:x",
+                                     "slow:-1", None, 7])
+    def test_malformed_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            parse_spec(bad)
+
+
+class TestParseSchedule:
+    def test_schedule(self):
+        sched = parse_schedule("3=crash:1, 7=slow:0",
+                               faultspec.SERVE_KINDS)
+        assert sched == {3: "crash:1", 7: "slow:0"}
+
+    def test_schedule_validates_specs(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            parse_schedule("3=sdc", faultspec.SERVE_KINDS)
+        with pytest.raises(ValueError, match="tick"):
+            parse_schedule("x=crash:1")
+        with pytest.raises(ValueError, match="not 'tick="):
+            parse_schedule("crash:1")
+
+
+class TestTrainInjectorUsesSharedGrammar:
+    def test_slow_replica_parses_via_faultspec(self):
+        from repro.train.fault import FailureInjector
+        inj = FailureInjector(schedule={5: "slow:2", 9: "slow"})
+        assert inj.slow_replica(5) == 2
+        assert inj.slow_replica(9) == 0      # unaddressed -> replica 0
+        assert inj.slow_replica(1) is None

@@ -141,6 +141,66 @@ class TestFusedDecodeParity:
         assert r2.out == r.out
 
 
+class TestPerRequestSeed:
+    """Request.seed pins the sampling stream to (seed, stream index) —
+    fold_in(PRNGKey(seed), t) — independent of slot, engine rng, or which
+    replica runs the request (the gateway's retry-determinism contract)."""
+
+    def test_seeded_request_reproduces_across_engines_and_slots(self,
+                                                                gqa_cfg):
+        """Same request seed, different engine seeds AND different slots:
+        bitwise-identical sampled output."""
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=64, seed=11, chunk=4,
+                          temperature=0.8, top_k=8)
+        r = Request(0, np.arange(5), max_new=8, seed=1234)
+        eng.add_request(r)
+        eng.run_until_done()
+        eng2 = ServeEngine(gqa_cfg, params=eng.params, slots=2, max_len=64,
+                           seed=999, chunk=4, temperature=0.8, top_k=8)
+        # occupy slot 0 with a decoy so the seeded request lands in slot 1
+        eng2.add_request(Request(7, np.arange(3), max_new=20))
+        r2 = Request(0, np.arange(5), max_new=8, seed=1234)
+        eng2.add_request(r2)
+        eng2.run_until_done()
+        assert r2.out == r.out
+
+    def test_unseeded_requests_keep_engine_rng_determinism(self, gqa_cfg):
+        """seed=None falls back to the engine rng: same engine seed still
+        reproduces (the pre-gateway behaviour, pinned)."""
+        outs = []
+        params = None
+        for _ in range(2):
+            eng = ServeEngine(gqa_cfg, params=params, slots=1, max_len=32,
+                              seed=5, chunk=4, temperature=0.9, top_k=4)
+            params = eng.params
+            r = Request(0, np.arange(4), max_new=6)
+            eng.add_request(r)
+            eng.run_until_done()
+            outs.append(r.out)
+        assert outs[0] == outs[1]
+
+    @pytest.mark.parametrize("cut", [1, 3, 6])
+    def test_retry_continuation_is_bitwise_equal(self, gqa_cfg, cut):
+        """The gateway's re-dispatch path: re-prefill prompt + delivered
+        tokens on a fresh engine with sample_offset=len(delivered) — the
+        continuation must equal the uninterrupted run's tail bitwise."""
+        prompt = np.arange(5)
+        full = Request(0, prompt, max_new=8, seed=42)
+        eng = ServeEngine(gqa_cfg, slots=2, max_len=64, seed=1, chunk=4,
+                          temperature=0.8, top_k=8)
+        eng.add_request(full)
+        eng.run_until_done()
+        assert full.done and len(full.out) == 8
+        delivered = full.out[:cut]
+        eng2 = ServeEngine(gqa_cfg, params=eng.params, slots=2, max_len=64,
+                           seed=77, chunk=4, temperature=0.8, top_k=8)
+        cont = Request(1, np.concatenate([prompt, delivered]).astype(np.int32),
+                       max_new=8 - cut, seed=42, sample_offset=cut)
+        eng2.add_request(cont)
+        eng2.run_until_done()
+        assert cont.out == full.out[cut:]
+
+
 class TestPrefillBucketing:
     def test_bucket_length(self):
         assert bucket_length(1, 64) == 8

@@ -1,0 +1,300 @@
+"""Gateway chaos suite (ISSUE 7): health-checked routing, circuit
+breaking, retry/re-dispatch determinism, load shedding, drain — all
+driven by the serve-side fault injector on the gateway's virtual tick
+clock, so every run is deterministic."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.serve.engine import AdmissionError
+from repro.serve.fault import ReplicaCrash, ServeFaultInjector
+from repro.serve.gateway import (CLOSED, DEAD, HALF_OPEN, HEALTHY, OPEN,
+                                 SUSPECT, Gateway, ReplicaRegistry, Router)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config(get_config("qwen3-14b"))
+
+
+@pytest.fixture(scope="module")
+def shared_params(cfg):
+    from repro.serve.engine import ServeEngine
+    return ServeEngine(cfg, slots=1, max_len=64).params
+
+
+def mk_gateway(cfg, params, **kw):
+    kw.setdefault("replicas", 2)
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk", 4)
+    return Gateway(cfg, params=params, **kw)
+
+
+def baseline_outputs(cfg, params, n=3, max_new=6, **kw):
+    """Fault-free reference run: one request per distinct prompt."""
+    gw = mk_gateway(cfg, params, **kw)
+    reqs = [gw.submit(np.arange(4 + i), max_new=max_new) for i in range(n)]
+    gw.run_until_done()
+    assert all(r.state == "done" for r in reqs)
+    return [list(r.delivered) for r in reqs]
+
+
+class TestHealthMachine:
+    def test_registry_states_and_deregister(self, cfg, shared_params):
+        gw = mk_gateway(cfg, shared_params)
+        assert gw.registry.states() == {0: HEALTHY, 1: HEALTHY}
+        gw.registry.deregister(1)
+        assert list(gw.registry.states()) == [0]
+
+    def test_hang_escalates_suspect_then_dead(self, cfg, shared_params):
+        """Missed heartbeats walk HEALTHY -> SUSPECT -> DEAD; the dead
+        replica's circuit opens and its residents complete via retry on
+        the survivor (ISSUE 7 chaos path #2)."""
+        inj = ServeFaultInjector({2: "hang:0"})
+        gw = mk_gateway(cfg, shared_params, injector=inj,
+                        suspect_after=2, dead_after=4)
+        reqs = [gw.submit(np.arange(4 + i), max_new=8) for i in range(4)]
+        seen = set()
+        for _ in range(100):
+            gw.tick()
+            seen.add(gw.registry.replicas[0].state)
+            if not gw.outstanding():
+                break
+        assert seen >= {SUSPECT, DEAD}          # escalated through both
+        assert gw.registry.replicas[0].circuit == OPEN
+        assert gw.registry.replicas[1].state == HEALTHY
+        assert all(r.state == "done" for r in reqs)
+        assert gw.stats["replica_deaths"] == 1
+
+    def test_all_replicas_dead_fails_loudly(self, cfg, shared_params):
+        inj = ServeFaultInjector({1: "crash:0", 2: "crash:1"})
+        gw = mk_gateway(cfg, shared_params, injector=inj)
+        r = gw.submit(np.arange(4), max_new=8)
+        gw.run_until_done()
+        assert r.state == "failed" and "no live replicas" in r.error
+
+
+class TestRetryDeterminism:
+    def test_crash_mid_decode_greedy_bitwise_equal(self, cfg,
+                                                   shared_params):
+        """ISSUE 7 acceptance: crash a replica mid-stream; every affected
+        request completes via retry on the survivor with greedy output
+        bitwise-equal to the no-fault run."""
+        base = baseline_outputs(cfg, shared_params, n=3, max_new=6)
+        inj = ServeFaultInjector({2: "crash:0"})
+        gw = mk_gateway(cfg, shared_params, injector=inj)
+        reqs = [gw.submit(np.arange(4 + i), max_new=6) for i in range(3)]
+        gw.run_until_done()
+        assert gw.stats["retries"] > 0
+        assert gw.registry.replicas[0].state == DEAD
+        assert all(r.state == "done" for r in reqs)
+        assert [list(r.delivered) for r in reqs] == base
+
+    def test_crash_mid_decode_sampled_bitwise_equal(self, cfg,
+                                                    shared_params):
+        """Same contract under temperature/top-k sampling: per-request
+        seeded streams survive re-dispatch bitwise."""
+        kw = dict(temperature=0.8, top_k=8)
+        base = baseline_outputs(cfg, shared_params, n=3, max_new=6, **kw)
+        inj = ServeFaultInjector({2: "crash:0"})
+        gw = mk_gateway(cfg, shared_params, injector=inj, **kw)
+        reqs = [gw.submit(np.arange(4 + i), max_new=6) for i in range(3)]
+        gw.run_until_done()
+        assert gw.stats["retries"] > 0
+        assert all(r.state == "done" for r in reqs)
+        assert [list(r.delivered) for r in reqs] == base
+
+    def test_delivered_prefix_never_regenerated(self, cfg, shared_params):
+        """The retry is a continuation: tokens the gateway already
+        delivered stay delivered (no duplicates, no rewind) and the
+        request's retries counter records the re-dispatch."""
+        inj = ServeFaultInjector({3: "crash:0"})
+        gw = mk_gateway(cfg, shared_params, replicas=2, injector=inj)
+        r = gw.submit(np.arange(4), max_new=12)
+        pre_crash = None
+        for _ in range(100):
+            gw.tick()
+            if gw.clock == 3 and pre_crash is None:
+                pre_crash = list(r.delivered)
+            if not gw.outstanding():
+                break
+        assert r.state == "done" and len(r.delivered) == 12
+        if r.retries:                      # crashed replica owned it
+            assert r.delivered[:len(pre_crash)] == pre_crash
+
+    def test_retry_budget_exhausted_fails(self, cfg, shared_params):
+        """A request whose replicas keep dying fails loudly once the
+        retry budget is spent."""
+        inj = ServeFaultInjector({2: "crash:0"})
+        gw = mk_gateway(cfg, shared_params, replicas=1, slots=4,
+                        injector=inj, max_retries=0)
+        r = gw.submit(np.arange(4), max_new=12)
+        gw.run_until_done()
+        assert r.state == "failed"
+
+
+class TestCircuitBreaker:
+    def test_flaky_admit_opens_circuit_then_recovers(self, cfg,
+                                                     shared_params):
+        """Consecutive admission failures trip the breaker; after the
+        cooldown a half-open probe succeeds (the flakiness has passed)
+        and the circuit closes again."""
+        inj = ServeFaultInjector({1: "flaky-admit:0"}, flaky_ticks=4)
+        gw = mk_gateway(cfg, shared_params, replicas=2, slots=1,
+                        circuit_threshold=2, circuit_cooldown=3,
+                        injector=inj)
+        # enough work that the router keeps trying replica 0
+        reqs = [gw.submit(np.arange(4 + i % 3), max_new=6)
+                for i in range(6)]
+        circuit_states = set()
+        for _ in range(200):
+            gw.tick()
+            circuit_states.add(gw.registry.replicas[0].circuit)
+            if not gw.outstanding():
+                break
+        assert OPEN in circuit_states             # breaker tripped
+        assert gw.registry.replicas[0].circuit == CLOSED   # and recovered
+        assert gw.registry.replicas[0].state == HEALTHY
+        assert all(r.state == "done" for r in reqs)
+
+    def test_router_skips_open_circuit(self):
+        """Router unit check: an OPEN circuit is not routable until the
+        cooldown elapses, then exactly one half-open probe goes through."""
+        import dataclasses as dc
+
+        from repro.serve.gateway import GatewayRequest, Replica
+        router = Router(threshold=1, cooldown=5)
+        rep = Replica(0, engine=None)
+        router.on_failure(rep, tick=10)
+        assert rep.circuit == OPEN
+        gr = GatewayRequest(gid=0, prompt=np.arange(4))
+        assert router.routable([rep], tick=12) == []
+        assert router.routable([rep], tick=15) == [rep]
+        assert rep.circuit == HALF_OPEN
+        assert router.route(gr, [rep], tick=15) is rep
+        assert rep.probe_gid == 0
+        # second request while the probe is in flight: nothing routable
+        assert router.route(dc.replace(gr, gid=1), [rep], tick=15) is None
+        router.on_success(rep)
+        assert rep.circuit == CLOSED
+
+
+class TestDegradation:
+    def test_drain_finishes_residents_refuses_admits(self, cfg,
+                                                     shared_params):
+        """ISSUE 7 chaos path #3: drain mode completes what is resident
+        and rejects everything new with typed backpressure."""
+        gw = mk_gateway(cfg, shared_params)
+        reqs = [gw.submit(np.arange(4 + i), max_new=8) for i in range(3)]
+        gw.tick()                                  # requests now resident
+        gw.drain()
+        with pytest.raises(AdmissionError, match="draining"):
+            gw.submit(np.arange(4), max_new=4)
+        gw.run_until_done()
+        assert all(r.state == "done" for r in reqs)
+
+    def test_gateway_queue_backpressure(self, cfg, shared_params):
+        """Bounded intake: overflow raises AdmissionError and already
+        accepted requests still all complete."""
+        gw = mk_gateway(cfg, shared_params, max_pending=2)
+        ok = [gw.submit(np.arange(4), max_new=4) for _ in range(2)]
+        with pytest.raises(AdmissionError, match="queue full"):
+            gw.submit(np.arange(4), max_new=4)
+        assert gw.stats["rejected"] == 1
+        gw.run_until_done()
+        assert all(r.state == "done" for r in ok)
+
+    def test_load_shedding_by_priority(self, cfg, shared_params):
+        """Over the occupancy watermark, queued requests below
+        shed_min_priority are shed; higher-priority traffic completes."""
+        gw = mk_gateway(cfg, shared_params, replicas=1, slots=2,
+                        shed_watermark=0.5, shed_min_priority=1)
+        resident = [gw.submit(np.arange(4 + i), max_new=12)
+                    for i in range(2)]
+        gw.tick()                # both admitted -> occupancy 1.0 >= 0.5
+        low = gw.submit(np.arange(6), max_new=4, priority=0)
+        high = gw.submit(np.arange(7), max_new=4, priority=2)
+        gw.run_until_done()
+        assert low.state == "shed"
+        assert high.state == "done"
+        assert all(r.state == "done" for r in resident)
+        assert gw.stats["shed"] == 1
+
+    def test_deadline_times_out(self, cfg, shared_params):
+        """A tick deadline cancels a still-running request (slot freed)
+        and marks it timed_out; an untimed peer finishes normally."""
+        gw = mk_gateway(cfg, shared_params, replicas=1, slots=2, chunk=2)
+        slow = gw.submit(np.arange(4), max_new=32, timeout_ticks=2)
+        ok = gw.submit(np.arange(5), max_new=4)
+        gw.run_until_done()
+        assert slow.state == "timed_out"
+        assert 0 < len(slow.delivered) < 32       # partial delivery only
+        assert ok.state == "done"
+        eng = gw.registry.replicas[0].engine
+        assert all(r is None for r in eng.active)  # slot reclaimed
+
+
+class TestRoutingAndStragglers:
+    def test_least_loaded_spreads_across_replicas(self, cfg,
+                                                  shared_params):
+        gw = mk_gateway(cfg, shared_params, replicas=2, slots=2)
+        # distinct prefixes so affinity can't collapse them onto one
+        reqs = [gw.submit(np.arange(4) + 10 * i, max_new=8)
+                for i in range(4)]
+        gw.tick()
+        used = {gr.replica for gr in reqs}
+        assert used == {0, 1}
+        gw.run_until_done()
+        assert all(r.state == "done" for r in reqs)
+
+    def test_prefix_affinity_prefers_prior_replica(self, cfg,
+                                                   shared_params):
+        """Same prompt prefix lands on the replica that served it (when
+        load allows) — the paged-cache reuse hook."""
+        gw = mk_gateway(cfg, shared_params, replicas=2, slots=2)
+        a = gw.submit(np.arange(8), max_new=4)
+        gw.run_until_done()
+        b = gw.submit(np.arange(8), max_new=4)
+        gw.run_until_done()
+        assert b.replica == a.replica
+        assert gw.router.affinity_hits >= 1
+
+    def test_slow_replica_still_completes(self, cfg, shared_params):
+        """slow:<r> is a straggler, not a corpse: it keeps heartbeating,
+        stays routable, and its residents finish (late) without retry."""
+        inj = ServeFaultInjector({1: "slow:0"}, slow_factor=4.0,
+                                 slow_ticks=8)
+        gw = mk_gateway(cfg, shared_params, injector=inj)
+        reqs = [gw.submit(np.arange(4 + i), max_new=6) for i in range(3)]
+        gw.run_until_done()
+        assert gw.registry.replicas[0].state == HEALTHY
+        assert gw.stats["retries"] == 0
+        assert all(r.state == "done" for r in reqs)
+
+
+class TestInjectorUnit:
+    def test_schedule_validated_at_construction(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            ServeFaultInjector({1: "sdc"})
+        with pytest.raises(ValueError, match="tick"):
+            ServeFaultInjector({-1: "crash:0"})
+
+    def test_predicates(self):
+        inj = ServeFaultInjector({1: "crash:0", 2: "slow:1", 3: "hang:2",
+                                  4: "flaky-admit:1"},
+                                 slow_factor=3.0, slow_ticks=2,
+                                 flaky_ticks=2)
+        for t in range(1, 5):
+            inj.advance(t)
+        assert inj.crashed(0) and not inj.crashed(1)
+        with pytest.raises(ReplicaCrash):
+            inj.check_alive(0)
+        assert inj.slow_multiplier(1, 3) == 3.0
+        assert inj.slow_multiplier(1, 9) == 1.0    # expired
+        assert inj.hung(2) and not inj.heartbeats(2)
+        inj.revive(2)
+        assert inj.heartbeats(2)
+        assert inj.admit_fails(1, 5) and not inj.admit_fails(1, 9)
+        assert [s for _, s in inj.events] == [
+            "crash:0", "slow:1", "hang:2", "flaky-admit:1"]

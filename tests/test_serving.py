@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs.base import get_config, smoke_config
 from repro.serve.disagg import Disaggregator
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import AdmissionError, Request, ServeEngine
 from repro.serve.speculative import SpecDecodeModel, paper_claim
 
 
@@ -82,6 +82,90 @@ class TestEngine:
         eng.run_until_done()
         assert eng.stats["drafts"] > 0
         assert 0.0 <= eng.acceptance_rate() <= 1.0
+
+
+class TestBoundedAdmission:
+    """max_pending backpressure (ISSUE 7): a full pending queue raises a
+    typed AdmissionError — the gateway's backpressure signal — and
+    rejection never perturbs the FIFO order of what was already queued."""
+
+    def test_submit_over_max_pending_raises_typed(self, dsv3_cfg):
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32, max_pending=2)
+        eng.submit(Request(0, np.arange(4), max_new=4))
+        eng.submit(Request(1, np.arange(4), max_new=4))
+        with pytest.raises(AdmissionError, match="pending queue full"):
+            eng.submit(Request(2, np.arange(4), max_new=4))
+        # AdmissionError is a RuntimeError: pre-gateway callers still work
+        assert issubclass(AdmissionError, RuntimeError)
+
+    def test_fifo_preserved_under_rejection(self, dsv3_cfg):
+        """Interleave accepted and rejected submits; completion order of
+        the accepted ones must be exactly submission order."""
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32, max_pending=3)
+        accepted = []
+        order = []
+        reqs = []
+        for rid in range(6):
+            r = Request(rid, np.arange(4), max_new=3)
+            try:
+                eng.submit(r)
+                accepted.append(rid)
+                reqs.append(r)
+            except AdmissionError:
+                pass
+        assert len(accepted) == 3 and accepted == sorted(accepted)
+        # slot=1 admits strictly one at a time -> first token order == FIFO
+        seen = set()
+        for _ in range(100):
+            eng.step()
+            for r in reqs:
+                if r.out and r.rid not in seen:
+                    seen.add(r.rid)
+                    order.append(r.rid)
+            if all(r.done for r in reqs):
+                break
+        assert order == accepted
+        # queue drained: capacity is available again, same FIFO semantics
+        r6 = Request(6, np.arange(4), max_new=2)
+        eng.submit(r6)
+        eng.run_until_done()
+        assert r6.done
+
+    def test_unbounded_by_default(self, dsv3_cfg):
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32)
+        for rid in range(8):
+            eng.submit(Request(rid, np.arange(4), max_new=2))
+        assert len(eng.pending) == 8
+
+    def test_cancel_pending_and_active(self, dsv3_cfg):
+        """cancel(rid): pending requests drop from the queue; active ones
+        free their slot (and pages) without being marked done — the
+        gateway re-dispatches them as continuations."""
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=32, paged=True,
+                          page_size=8)
+        ra = Request(0, np.arange(4), max_new=8)
+        rb = Request(1, np.arange(4), max_new=8)
+        eng.add_request(ra)
+        eng.submit(rb)
+        assert eng.cancel(1)                 # pending -> dropped
+        assert not eng.pending
+        pages_used = eng.pool_stats()["pages_used"]
+        assert pages_used > 0
+        assert eng.cancel(0)                 # active -> slot + pages freed
+        assert eng.free_slots() == [0]
+        assert eng.pool_stats()["pages_used"] == 0
+        assert not ra.done and len(ra.out) == 1
+        assert not eng.cancel(42)            # unknown rid
+
+    def test_disagg_bounded_handoff_queue(self, dsv3_cfg):
+        dis = Disaggregator(dsv3_cfg, decode_slots=1, max_len=32,
+                            max_queue=2)
+        for rid in range(2):
+            dis.submit(Request(rid, np.arange(4), max_new=4))
+        with pytest.raises(AdmissionError, match="handoff queue full"):
+            dis.submit(Request(2, np.arange(4), max_new=4))
+        dis.run()
+        assert all(r is None for r in dis.decode.active)
 
 
 class TestSpeculativeModel:

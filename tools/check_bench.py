@@ -4,7 +4,8 @@
 Replaces the copy-pasted heredoc assertion blocks that used to live in
 ``.github/workflows/ci.yml``: the CI jobs (and anyone locally) run ::
 
-    python tools/check_bench.py BENCH_serve.json BENCH_train.json
+    python tools/check_bench.py BENCH_serve.json BENCH_train.json \
+                                BENCH_gateway.json
     python tools/check_bench.py --require-sharded BENCH_serve.json
 
 Checks two layers:
@@ -16,8 +17,10 @@ Checks two layers:
 * **invariants** — the paper-grounded performance gates: paged-fp8 cache
   bytes <= 0.55x dense and >= 2x resident slots, paged-bf16 token streams
   bitwise-equal to dense, sharded decode streams equal to the
-  single-device engine, and ``ep_dedup`` moving strictly fewer all-to-all
-  bytes than ``ep_flat`` (serve decode *and* train step).
+  single-device engine, ``ep_dedup`` moving strictly fewer all-to-all
+  bytes than ``ep_flat`` (serve decode *and* train step), and the
+  gateway's fault gates (crash-row retries fired, recovered streams
+  bitwise-equal to no-fault, SLO attainment retained >= 0.9x).
 
 Stdlib-only so the CI lint job can gate on it before jax is installed.
 """
@@ -53,9 +56,17 @@ TRAIN_KEYS = ("impl", "wire", "mesh", "batch", "seq", "steps",
               "tokens_per_s", "step_ms", "alltoall_bytes", "alltoall_ops",
               "loss_first", "loss_last", "backend")
 
+GATEWAY_KEYS = ("scenario", "arch", "replicas", "slots", "chunk",
+                "requests", "max_new", "arrival_rate", "zipf_a", "ticks",
+                "completed", "failed", "shed", "timed_out", "rejected",
+                "retry_count", "replica_deaths", "affinity_hits",
+                "goodput_req_per_tick", "ttft_ticks_p50", "ttft_ticks_p99",
+                "slo_ttft_ticks", "slo_attainment", "backend")
+
 # the paper-grounded gates (see docs/serving.md §4, docs/training.md)
 FP8_MAX_BYTES_RATIO = 0.55     # paged-fp8 cache bytes vs dense bf16
 FP8_MIN_SLOTS_RATIO = 2.0      # paged-fp8 resident slots vs dense budget
+GATEWAY_SLO_RETENTION = 0.9    # crash-row SLO vs no-fault (serving.md §6)
 
 
 def _row_errors(row: dict, required: tuple, label: str) -> List[str]:
@@ -167,6 +178,45 @@ def validate_train(doc: dict) -> List[str]:
     return errs
 
 
+def validate_gateway(doc: dict) -> List[str]:
+    """BENCH_gateway.json: the fault-tolerance gates — the injected crash
+    actually fired (retries + a recorded death), recovery kept delivered
+    token streams bitwise-equal to the no-fault run, and SLO attainment
+    under one crash held >= 0.9x the no-fault row's."""
+    errs: List[str] = []
+    rows = doc.get("rows")
+    if doc.get("suite") != "gateway_bench" or not isinstance(rows, list):
+        return ["not a gateway_bench document (suite/rows)"]
+    by = {}
+    for i, row in enumerate(rows):
+        label = f"rows[{i}] ({row.get('scenario')})"
+        errs.extend(_row_errors(row, GATEWAY_KEYS, label))
+        by[row.get("scenario")] = row
+    if set(by) != {"no-fault", "one-crash"}:
+        errs.append(f"gateway rows must cover no-fault+one-crash, got "
+                    f"{sorted(k for k in by if k)}")
+        return errs
+    nf, cr = by["no-fault"], by["one-crash"]
+    if nf.get("completed", 0) != nf.get("requests", -1):
+        errs.append(f"no-fault: completed {nf.get('completed')} != "
+                    f"requests {nf.get('requests')}")
+    if not cr.get("retry_count", 0) > 0:
+        errs.append("one-crash: retry_count must be > 0 (the injected "
+                    "crash must force at least one re-dispatch)")
+    if not cr.get("replica_deaths", 0) >= 1:
+        errs.append("one-crash: replica_deaths must be >= 1")
+    if not cr.get("outputs_equal_no_fault"):
+        errs.append("one-crash: delivered token streams diverge from the "
+                    "no-fault run (retries must be bitwise-idempotent)")
+    if cr.get("slo_attainment", 0) < \
+            GATEWAY_SLO_RETENTION * nf.get("slo_attainment", 1):
+        errs.append(
+            f"one-crash SLO attainment {cr.get('slo_attainment')} below "
+            f"{GATEWAY_SLO_RETENTION}x no-fault "
+            f"({nf.get('slo_attainment')})")
+    return errs
+
+
 def check_file(path: str, *, require_sharded: bool = False) -> List[str]:
     try:
         with open(path, encoding="utf-8") as f:
@@ -178,6 +228,8 @@ def check_file(path: str, *, require_sharded: bool = False) -> List[str]:
         errs = validate_serve(doc, require_sharded=require_sharded)
     elif suite == "train_bench":
         errs = validate_train(doc)
+    elif suite == "gateway_bench":
+        errs = validate_gateway(doc)
     else:
         errs = [f"unknown suite {suite!r}"]
     return errs
@@ -185,7 +237,8 @@ def check_file(path: str, *, require_sharded: bool = False) -> List[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="validate BENCH_serve.json / BENCH_train.json")
+        description="validate BENCH_serve.json / BENCH_train.json / "
+                    "BENCH_gateway.json")
     ap.add_argument("files", nargs="+")
     ap.add_argument("--require-sharded", action="store_true",
                     help="fail if serve docs lack the ep_flat/ep_dedup "

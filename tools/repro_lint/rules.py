@@ -600,6 +600,82 @@ class ConfigCompletenessRule(Rule):
                 "it — get_config cannot resolve this arch")
 
 
+# ---------------------------------------------------------------------------
+# R9 exception-hygiene
+# ---------------------------------------------------------------------------
+
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+def _broad_exception(node: Optional[ast.AST]) -> bool:
+    """True when an except clause catches Exception/BaseException (alone
+    or inside a tuple)."""
+    if node is None:
+        return True
+    if isinstance(node, ast.Tuple):
+        return any(_broad_exception(e) for e in node.elts)
+    return A.dotted(node).rsplit(".", 1)[-1] in _BROAD_EXC
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing with the exception: only
+    pass/.../continue — no re-raise, no marking, no logging."""
+    for stmt in handler.body:
+        if isinstance(stmt, ast.Pass) or isinstance(stmt, ast.Continue):
+            continue
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant) and \
+                stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+class ExceptionHygieneRule(Rule):
+    """R9: no swallowed faults in the fault-handling tiers.
+
+    The serving gateway's health machinery (ISSUE 7) and the trainer's
+    §6.1 failure handling both work by *observing* exceptions: a crash
+    must surface as ``ReplicaCrash``, a rejected admission as
+    ``AdmissionError``, so the registry/circuit-breaker/retry paths see
+    it. A bare ``except:`` (which also eats ``KeyboardInterrupt``) or an
+    ``except Exception: pass`` anywhere in ``serve/**`` or ``train/**``
+    silently converts a detectable fault into a hang or wrong answer —
+    exactly the failure mode the heartbeat escalation exists to catch.
+    Broad catches that *handle* (re-raise, mark state, log) are fine;
+    broad catches that swallow are not.
+    """
+
+    name = "R9-exception-hygiene"
+    doc = ("no bare `except:` or swallowed `except Exception: pass` in "
+           "src/repro/serve/** and src/repro/train/** (swallowed faults "
+           "defeat the health machinery)")
+    include = ("*serve/*.py", "*train/*.py")
+    exclude = TESTS
+
+    def check_file(self, src: SourceFile,
+                   project: Project) -> Iterable[Diagnostic]:
+        out: List[Diagnostic] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(Diagnostic(
+                    src.rel, node.lineno, self.name,
+                    "bare `except:` catches everything (including "
+                    "KeyboardInterrupt) and hides faults from the health "
+                    "machinery; name the exceptions you mean"))
+            elif _broad_exception(node.type) and _swallows(node):
+                caught = A.dotted(node.type) if not isinstance(
+                    node.type, ast.Tuple) else "Exception"
+                out.append(Diagnostic(
+                    src.rel, node.lineno, self.name,
+                    f"`except {caught}: pass` swallows the fault the "
+                    "registry/circuit-breaker/retry paths need to see; "
+                    "handle it, re-raise, or catch the specific type"))
+        return out
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     HostSyncRule(),
     JitContractRule(),
@@ -609,4 +685,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     StrayDebugRule(),
     NondetTraceRule(),
     ConfigCompletenessRule(),
+    ExceptionHygieneRule(),
 )
