@@ -155,9 +155,11 @@ def _absorbed_attention(q_abs, q_rope, ckv, kr, valid, cfg: ModelConfig):
     """Shared absorbed-decode softmax over a dense latent view.
 
     ckv/kr: (B, T, rank/rope) cache rows (any layout origin — ring or
-    gathered pages); valid: (B, T) attendable mask. One implementation so
-    the dense and paged XLA paths are bitwise-identical given identical
-    rows and masks. Returns o_lat (B, 1, nh, rank) fp32.
+    gathered pages); valid: (B, T) shared across queries, or (B, S, T)
+    per-query (chunked prefill, where validity ``l <= qpos_i`` also covers
+    intra-chunk causality). One implementation so the dense and paged XLA
+    paths are bitwise-identical given identical rows and masks. Returns
+    o_lat (B, S, nh, rank) fp32.
     """
     m = cfg.mla
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
@@ -169,7 +171,8 @@ def _absorbed_attention(q_abs, q_rope, ckv, kr, valid, cfg: ModelConfig):
                          preferred_element_type=jnp.float32)
               + jnp.einsum("bshr,btr->bhst", q_rope.astype(cdt), kr,
                            preferred_element_type=jnp.float32)) * scale
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    mask = valid[:, None, None, :] if valid.ndim == 2 else valid[:, None]
+    scores = jnp.where(mask, scores, -1e30)
     attn = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhst,btc->bshc", attn.astype(cdt), ckv,
                       preferred_element_type=jnp.float32)
@@ -179,10 +182,10 @@ def _absorbed_out(p: dict, o_lat: jax.Array, x: jax.Array,
                   cfg: ModelConfig) -> jax.Array:
     """Absorb W_uv on the way out: out[h] = o_lat[h] @ W_uv[h]."""
     m, nh = cfg.mla, cfg.num_heads
-    B = x.shape[0]
+    B, S = o_lat.shape[:2]
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, nh, m.v_head_dim)
     out = jnp.einsum("bshc,chv->bshv", o_lat, w_uv.astype(jnp.float32))
-    out = out.reshape(B, 1, nh * m.v_head_dim).astype(x.dtype)
+    out = out.reshape(B, S, nh * m.v_head_dim).astype(x.dtype)
     return linear(out, p["w_o"], cfg)
 
 
@@ -233,36 +236,44 @@ def mla_paged_decode_step(p: dict, cache: dict, x: jax.Array, *,
     slot's current page, then attends over the slot's gathered pages —
     in-register dequantization on the ``pallas`` impl, an XLA gather that
     reuses the dense softmax (bitwise-identical at native storage) on
-    ``xla``. Returns (out (B,1,d), new_cache).
+    ``xla``. Also serves chunked prefill: ``x`` may carry ``S > 1`` tokens
+    (a page-aligned run — positions[:, 0] on a page boundary, S a multiple
+    of the page size); the run is written whole-pages-first, then attended
+    with per-query validity, which subsumes intra-chunk causality. The
+    pallas kernel stays single-token; S > 1 always takes the XLA path.
+    Returns (out (B,S,d), new_cache).
     """
     from repro.core import paged
     m = cfg.mla
+    S = x.shape[1]
     qpos = positions[:, 0]
     fp8 = "ckv_scale" in cache
 
-    q_nope, q_rope = _queries(p, x, cfg, positions)       # (B,1,nh,*)
-    ckv_new, kr_new = _latents(p, x, cfg, positions)      # (B,1,rank/rope)
+    q_nope, q_rope = _queries(p, x, cfg, positions)       # (B,S,nh,*)
+    ckv_new, kr_new = _latents(p, x, cfg, positions)      # (B,S,rank/rope)
 
     new_cache = dict(cache)
-    if fp8:
-        qc, sc = paged.quantize_vecs(ckv_new[:, 0])
-        qk, sk = paged.quantize_vecs(kr_new[:, 0])
-        new_cache["ckv"] = paged.page_write(cache["ckv"], page_table, qpos, qc)
-        new_cache["kr"] = paged.page_write(cache["kr"], page_table, qpos, qk)
-        new_cache["ckv_scale"] = paged.page_write(
-            cache["ckv_scale"], page_table, qpos, sc)
-        new_cache["kr_scale"] = paged.page_write(
-            cache["kr_scale"], page_table, qpos, sk)
+    if S == 1:
+        def write(pool, vals):
+            return paged.page_write(pool, page_table, qpos, vals[:, 0])
     else:
-        new_cache["ckv"] = paged.page_write(
-            cache["ckv"], page_table, qpos, ckv_new[:, 0])
-        new_cache["kr"] = paged.page_write(
-            cache["kr"], page_table, qpos, kr_new[:, 0])
+        def write(pool, vals):
+            return paged.page_write_chunk(pool, page_table, qpos, vals)
+    if fp8:
+        qc, sc = paged.quantize_vecs(ckv_new)
+        qk, sk = paged.quantize_vecs(kr_new)
+        new_cache["ckv"] = write(cache["ckv"], qc)
+        new_cache["kr"] = write(cache["kr"], qk)
+        new_cache["ckv_scale"] = write(cache["ckv_scale"], sc)
+        new_cache["kr_scale"] = write(cache["kr_scale"], sk)
+    else:
+        new_cache["ckv"] = write(cache["ckv"], ckv_new)
+        new_cache["kr"] = write(cache["kr"], kr_new)
 
     q_abs = _absorb_queries(p, q_nope, cfg)
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
 
-    if impl == "pallas":
+    if impl == "pallas" and S == 1:
         from repro.kernels.paged_attention import ops as paged_ops
         ones = jnp.ones(cache["ckv"].shape[:2], jnp.float32)
         o_lat = paged_ops.paged_mla_decode(
@@ -280,9 +291,14 @@ def mla_paged_decode_step(p: dict, cache: dict, x: jax.Array, *,
             ckv_t = paged.dequantize_vecs(ckv_t, cs_t).astype(cfg.dtype)
             kr_t = paged.dequantize_vecs(kr_t, ks_t).astype(cfg.dtype)
         T = ckv_t.shape[1]
-        # positional validity: everything at or below the current decode
-        # position was written by this slot (pages never ring-wrap)
-        valid = jnp.arange(T, dtype=jnp.int32)[None, :] <= qpos[:, None]
+        # positional validity: everything at or below the query's position
+        # was written by this slot (pages never ring-wrap). Per-query for
+        # multi-token runs, which is exactly intra-chunk causal masking.
+        if S == 1:
+            valid = jnp.arange(T, dtype=jnp.int32)[None, :] <= qpos[:, None]
+        else:
+            valid = (jnp.arange(T, dtype=jnp.int32)[None, None, :]
+                     <= positions[:, :, None])
         o_lat = _absorbed_attention(q_abs, q_rope, ckv_t, kr_t, valid, cfg)
 
     return _absorbed_out(p, o_lat, x, cfg), new_cache

@@ -90,18 +90,61 @@ def mtp_draft(p: dict, h_last: jax.Array, emb_next: jax.Array, *,
 
 def mtp_draft_tokens(params: dict, cache: dict, cfg: ModelConfig,
                      last_tokens: jax.Array, positions: jax.Array,
-                     embed_fn: Callable, unembed_fn: Callable) -> jax.Array:
+                     embed_fn: Callable, unembed_fn: Callable
+                     ) -> Tuple[jax.Array, dict]:
     """Greedy draft token per slot, traced inside the fused decode loop.
 
-    last_tokens/positions: (B,) — the token each slot just emitted and its
-    successor position. Reads the main model's last hidden from
-    ``cache['mtp_h']``; returns (B,) int32 draft of the token-after-next.
+    Runs one step of MTP module 1 at position ``positions - 1`` — the pair
+    ``(h_{p-1}, Emb(t_p))`` carried in ``cache['mtp_h']`` / the slot's
+    current token — against the module's own KV ring ``cache['mtp']``
+    (populated over the prompt at prefill), exactly the context the module
+    saw in training. The old path ran the block with ``cache=None`` so
+    every draft attended over a single token; with no context the draft
+    never matched the verify stream and acceptance was stuck at 0.
+
+    last_tokens/positions: (B,) — the token each slot emitted last step
+    and its position. Returns ``(draft (B,) int32, new_ring)`` where the
+    draft predicts the token the *current* step is about to emit and
+    ``new_ring`` is the updated layer-stacked ``cache['mtp']`` subtree.
     """
     from repro.models import transformer as tfm
+    ring = jax.tree.map(lambda x: x[0], cache["mtp"])
+    new_ring: dict = {}
+
+    def bapply(pb, x, pos):
+        out, ring_out, _ = tfm.block_apply(
+            pb, x, cfg, dict(positions=pos, causal=True), ring)
+        new_ring.update(ring_out)
+        return out
+
     logits = mtp_draft(
         params["mtp"], cache["mtp_h"], embed_fn(last_tokens[:, None]),
-        cfg=cfg, positions=positions[:, None],
-        block_apply=lambda p, x, positions: tfm.block_apply(
-            p, x, cfg, dict(positions=positions, causal=True), None)[0],
-        unemb_fn=unembed_fn)
-    return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        cfg=cfg, positions=positions[:, None] - 1,
+        block_apply=bapply, unemb_fn=unembed_fn)
+    draft = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return draft, jax.tree.map(lambda x: x[None], new_ring)
+
+
+def mtp_align_head(params: dict) -> dict:
+    """Rewrite the MTP head so module 1's draft is exactly the main model's
+    greedy argmax at the draft position (test/bench utility).
+
+    Zeroes every MTP parameter (pre-norm residual blocks become identity,
+    attention/FFN contribute nothing), then sets ``norm_h`` to ones and
+    ``w_proj`` to ``[I; 0]`` so the module output is ``rmsnorm(h)``. The
+    shared unembedding applies its own rmsnorm first and rmsnorm is
+    scale-invariant and idempotent, so ``unemb(rmsnorm(h)) == unemb(h)``
+    logit-for-logit: the draft equals the greedy token after ``h``. Under
+    greedy sampling acceptance then counts exactly the consecutive-equal
+    pairs of the emitted stream — deterministically positive on a
+    repetitive workload, which the regression test pins.
+    """
+    m = dict(jax.tree.map(jnp.zeros_like, params["mtp"]))
+    n, d2, d = params["mtp"]["w_proj"].shape
+    proj = jnp.concatenate([jnp.eye(d), jnp.zeros((d2 - d, d))], axis=0)
+    m["w_proj"] = jnp.broadcast_to(proj, (n, d2, d)).astype(
+        params["mtp"]["w_proj"].dtype)
+    m["norm_h"] = jnp.ones_like(params["mtp"]["norm_h"])
+    p = dict(params)
+    p["mtp"] = m
+    return p

@@ -34,10 +34,12 @@ einsums), which the parity tests pin.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 E4M3 = jnp.float8_e4m3fn
 E4M3_MAX = 448.0
@@ -123,6 +125,27 @@ def page_write(pool: jax.Array, table: jax.Array, positions: jax.Array,
     return pool.at[phys, off].set(vals.astype(pool.dtype))
 
 
+def page_write_chunk(pool: jax.Array, table: jax.Array, start: jax.Array,
+                     vals: jax.Array) -> jax.Array:
+    """Write a contiguous, page-aligned run of tokens per slot.
+
+    pool: ``(P+1, page, ...)``; table: ``(B, pages_per_slot)``; start:
+    ``(B,)`` page-aligned first position of the run; vals: ``(B, C, ...)``
+    with ``C`` a multiple of the page size. The chunked-prefill analogue of
+    :func:`page_write`: one scatter covers ``C // page`` whole pages per
+    slot. Rows past a slot's reserved pages land in the trash page via the
+    table's padding, same as the single-token path.
+    """
+    page = pool.shape[1]
+    B, C = vals.shape[:2]
+    n = C // page
+    lp = start[:, None] // page + jnp.arange(n)[None, :]        # (B, n)
+    lp = jnp.clip(lp, 0, table.shape[1] - 1)
+    phys = jnp.take_along_axis(table, lp, axis=1)               # (B, n)
+    v = vals.reshape((B, n, page) + vals.shape[2:])
+    return pool.at[phys].set(v.astype(pool.dtype))
+
+
 def table_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
     """Gather each slot's pages into a dense view.
 
@@ -172,3 +195,146 @@ def scatter_pages(pool: jax.Array, pages: jax.Array,
     page). Layer-stacked: the scatter covers all ``n`` layers at once.
     """
     return pool.at[:, ids].set(pages.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Host-side page accounting: refcounts + copy-on-write prefix index
+# ---------------------------------------------------------------------------
+
+
+def prefix_keys(prompt: Sequence[int], page_size: int,
+                n_pages: int) -> List[bytes]:
+    """Exact-content index keys for a prompt's first ``n_pages`` full pages.
+
+    Key ``j`` is the byte image of ``prompt[:(j+1)*page_size]`` — the whole
+    prefix, not just the page's own tokens, so a hit at page ``j`` implies
+    every earlier page matched too (no hash-collision hazard: keys compare
+    by content).
+    """
+    arr = np.asarray(prompt, dtype=np.int32)
+    return [arr[:(j + 1) * page_size].tobytes() for j in range(n_pages)]
+
+
+class PrefixPageAllocator:
+    """Refcounted physical-page allocator with a prefix → page index.
+
+    Pure host/numpy bookkeeping over a pool of ``pool_pages`` physical ids
+    (the trash page is outside the pool and never allocated). Pages shared
+    between slots are immutable by construction: only *full* prompt pages
+    are ever indexed, decode writes start past the prompt, and chunked
+    prefill skips chunks whose pages were claimed from the index — so no
+    copy is ever needed and "copy-on-write fork" degenerates to "allocate
+    fresh pages from the divergence point".
+
+    Free pages live in two pools: ``plain`` (unindexed — recycled decode
+    and divergence pages) and ``cached`` (refcount-0 pages still holding an
+    indexed prefix, kept warm LRU so a later request with the same prefix
+    revives them). Allocation drains plain first, then evicts the oldest
+    cached page and purges its index entry.
+    """
+
+    def __init__(self, pool_pages: int):
+        self.pool_pages = pool_pages
+        self.refs = np.zeros((pool_pages,), np.int32)
+        self._free_plain: List[int] = list(range(pool_pages))
+        self._free_cached: "OrderedDict[int, bytes]" = OrderedDict()
+        self._index: Dict[bytes, int] = {}
+        self._page_key: Dict[int, bytes] = {}
+        self.prefix_hits = 0
+        self.prefix_lookups = 0
+
+    def free_pages(self) -> int:
+        return len(self._free_plain) + len(self._free_cached)
+
+    def indexed_pages(self) -> int:
+        return len(self._index)
+
+    def is_indexed(self, pid: int) -> bool:
+        """Whether ``pid`` currently backs a prefix-index entry."""
+        return pid in self._page_key
+
+    def lookup(self, key: bytes) -> Optional[int]:
+        """Physical page currently indexed under ``key`` (None = miss)."""
+        return self._index.get(key)
+
+    def _hit_run(self, keys: Sequence[bytes], granularity: int) -> List[int]:
+        hits: List[int] = []
+        for key in keys:
+            pid = self._index.get(key)
+            if pid is None:
+                break
+            hits.append(pid)
+        # chunked prefill can only skip whole chunks, so the shared run is
+        # rounded down to a chunk-multiple of pages
+        return hits[:len(hits) // granularity * granularity]
+
+    def _take_free(self) -> int:
+        if self._free_plain:
+            pid = self._free_plain.pop()
+        else:
+            pid, key = self._free_cached.popitem(last=False)  # oldest
+            del self._index[key]
+            del self._page_key[pid]
+        self.refs[pid] = 1
+        return pid
+
+    def can_admit(self, keys: Sequence[bytes], total_pages: int,
+                  granularity: int = 1) -> bool:
+        """Pure capacity probe for ``admit`` — no counters, no mutation."""
+        hits = self._hit_run(keys, granularity)
+        revived = sum(1 for pid in hits if self.refs[pid] == 0)
+        return total_pages - len(hits) <= self.free_pages() - revived
+
+    def admit(self, keys: Sequence[bytes], total_pages: int,
+              granularity: int = 1) -> Tuple[List[int], List[int]]:
+        """Atomically claim the longest indexed run of ``keys`` and allocate
+        fresh pages for the remainder of ``total_pages``.
+
+        Returns ``(hit_ids, fresh_ids)``; raises ``RuntimeError`` without
+        mutating any state when capacity is short. Keys must be contiguous
+        from page 0 (``prefix_keys`` order) — the run stops at the first
+        miss so a shared run is always a prefix of the page table row.
+        """
+        hits = self._hit_run(keys, granularity)
+        n_fresh = total_pages - len(hits)
+        # hit pages currently parked in the cached pool are about to be
+        # revived, so they can't also satisfy the fresh allocation
+        revived = sum(1 for pid in hits if self.refs[pid] == 0)
+        if n_fresh > self.free_pages() - revived:
+            raise RuntimeError("no free pages")
+        self.prefix_lookups += len(keys)
+        self.prefix_hits += len(hits)
+        for pid in hits:
+            if self.refs[pid] == 0:
+                del self._free_cached[pid]
+            self.refs[pid] += 1
+        fresh = [self._take_free() for _ in range(n_fresh)]
+        return hits, fresh
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` fresh (refcount-1, unindexed) pages."""
+        if n > self.free_pages():
+            raise RuntimeError("no free pages")
+        return [self._take_free() for _ in range(n)]
+
+    def register(self, key: bytes, pid: int) -> bool:
+        """Index a live page's content under ``key`` (first writer wins)."""
+        if key in self._index:
+            return False
+        self._index[key] = pid
+        self._page_key[pid] = key
+        return True
+
+    def release(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; refcount-0 pages return to the free
+        pools (cached if indexed, plain otherwise)."""
+        for pid in ids:
+            self.refs[pid] -= 1
+            assert self.refs[pid] >= 0, f"page {pid} over-released"
+            if self.refs[pid] == 0:
+                key = self._page_key.get(pid)
+                if key is not None:
+                    self._free_cached[pid] = key
+                    self._free_cached.move_to_end(pid)
+                else:
+                    self._free_plain.append(pid)

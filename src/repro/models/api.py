@@ -565,7 +565,120 @@ class Model:
                                      lengths)
         if cfg.mtp:
             cache["mtp_h"] = h_last
+            cache["mtp"] = self._mtp_prefill_ring(
+                params, h, tokens, pos, S + extra_slots, lengths)
         return logits, cache
+
+    def _mtp_prefill_ring(self, params, h, tokens, pos, T, lengths):
+        """Populate MTP module 1's KV ring over the prompt.
+
+        Training feeds the module the pair ``(h_k, Emb(t_{k+1}))`` at every
+        position; decode must present the same context or the draft
+        distribution has nothing to do with what the module learned (the
+        acceptance-rate-0 bug). This runs the module over the prompt's
+        ``L-1`` pairs (positions ``0..L-2``) collecting its block's cache
+        entries into a length-``T`` ring — position ``L-1``'s pair needs
+        the first generated token and is processed by the first fused
+        decode step, which continues the ring with no gap.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        cdt = jnp.dtype(cfg.cache_dtype_())
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+        if S == 1:     # single-token prompt: no pairs, empty ring
+            return self._init_mtp_ring(B, T)
+        Sm = S - 1
+        pair_pos = pos[:, :Sm]
+        # pair k exists iff t_{k+1} is a real prompt token: k < L-1
+        pair_valid = pair_pos < (lengths[:, None] - 1)
+        entries = {}
+
+        def bapply(pb, x, p_):
+            bctx = dict(positions=p_, causal=True, collect_cache=True,
+                        valid=pair_valid)
+            out, e, _ = tfm.block_apply(pb, x, cfg, bctx, None)
+            entries["e"] = e
+            return out
+
+        pm = jax.tree.map(lambda x: x[0], params["mtp"])
+        mtp_mod.mtp_hidden(pm, h[:, :Sm],
+                           self._embed(params, tokens[:, 1:]),
+                           cfg=cfg, positions=pair_pos, block_apply=bapply)
+
+        def ring(x):
+            m = pair_valid.reshape((B, Sm) + (1,) * (x.ndim - 2))
+            buf = jnp.zeros((B, T) + x.shape[2:], cdt)
+            return buf.at[:, :Sm].set(
+                jnp.where(m, x, 0).astype(cdt))[None]
+
+        rpos = jnp.where(pair_valid, pair_pos, -1)
+        rpos = jnp.pad(rpos, ((0, 0), (0, T - Sm)), constant_values=-1)[None]
+        a, b = entries["e"]
+        if cfg.attention == "mla":
+            return dict(ckv=ring(a), kr=ring(b), pos=rpos)
+        return dict(k=ring(a), v=ring(b), pos=rpos)
+
+    def prefill_chunk(self, params, cache, tokens, positions, lengths,
+                      row, slot, pctx=None):
+        """Process one chunk of one slot's prompt against the paged cache.
+
+        The incremental-prefill entry point for the continuous-batching
+        scheduler: instead of one whole-bucket ``prefill`` + page scatter,
+        the prompt streams through in page-aligned chunks between fused
+        decode dispatches. Each chunk writes its K/V (or MLA latents) into
+        the slot's pages *first*, then attends over the gathered pages
+        with per-query positional validity (``l <= qpos_i``), which covers
+        both the already-resident prefix and intra-chunk causality in one
+        path — no separate first-chunk/continuation trace shapes, so one
+        compile serves every chunk of every prompt of every slot.
+
+        tokens: (1, C) with C a multiple of the page size; positions:
+        (1, C) absolute positions, page-aligned start; lengths: (1,) full
+        prompt length — positions past ``lengths-1`` are pad (their writes
+        land beyond the live prefix and are either overwritten by decode
+        or masked by validity; MoE demotes them from the capacity contest
+        via ``ctx['valid']``); ``row`` (1, pages_per_slot) is the slot's
+        page-table row, passed as an operand rather than read from the
+        cache — the cache's own row stays pointed at the trash page until
+        the final chunk, so the slot's masked lane in any interleaved
+        decode dispatch cannot scribble on pages the prompt is still
+        streaming into; ``slot`` (traced scalar) picks the batch cache
+        row. Returns ``(logits (1, 1, V) at the chunk's last real
+        position, new_cache)`` — only the final chunk's logits (position
+        ``lengths-1``) are meaningful to sample from.
+        """
+        if pctx is not None:
+            from repro.parallel import context as pctx_mod
+            with pctx_mod.use(pctx):
+                return self._prefill_chunk_inner(params, cache, tokens,
+                                                 positions, lengths, row,
+                                                 slot)
+        return self._prefill_chunk_inner(params, cache, tokens, positions,
+                                         lengths, row, slot)
+
+    def _prefill_chunk_inner(self, params, cache, tokens, positions, lengths,
+                             row, slot):
+        cfg = self.cfg
+        B, C = tokens.shape
+        lengths = jnp.asarray(lengths, jnp.int32)
+        table = jnp.asarray(row, jnp.int32)
+        ctx = dict(positions=positions, causal=True, page_table=table,
+                   valid=positions < lengths[:, None],
+                   prompt_lengths=lengths)
+        h, new_caches, _, ctx = self._backbone(params, tokens, ctx, cache, {})
+        out_cache = dict(cache)
+        out_cache.update(new_caches)
+        idx = jnp.clip(lengths - 1 - positions[:, 0], 0, C - 1)[:, None, None]
+        h_last = jnp.take_along_axis(h, idx, axis=1)
+        if cfg.mtp:
+            # final chunk's value is h at lengths-1 (chunked prefill does
+            # not populate the MTP ring — the engine forbids combining it
+            # with use_mtp)
+            out_cache["mtp_h"] = jax.lax.dynamic_update_slice(
+                cache["mtp_h"], h_last.astype(cache["mtp_h"].dtype),
+                (slot, 0, 0))
+        return self._unembed(params, h_last), out_cache
 
     def _assemble_cache(self, entries, B, S, extra, ctx, batch, lengths=None):
         """Turn per-layer prefill entries into decode cache buffers."""
@@ -680,14 +793,16 @@ class Model:
 
         tokens/positions: last emitted token and its next position per slot.
         active: slot occupancy mask. left: decode-token budget (max-len
-        masking). eos: per-slot EOS id (-1 = none). draft: MTP draft of the
-        next token (-1 = no outstanding draft). rngs: per-slot PRNG *base*
-        key (the request's sampling identity — retries re-derive the same
-        stream); tix: per-slot sample index, folded into the base key each
-        step so token t of a request is always sampled with
+        masking). eos: per-slot EOS id (-1 = none). rngs: per-slot PRNG
+        *base* key (the request's sampling identity — retries re-derive the
+        same stream); tix: per-slot sample index, folded into the base key
+        each step so token t of a request is always sampled with
         ``fold_in(base, t)`` regardless of which slot/replica/chunk runs
         it. drafts/accepted: on-device speculative-decoding counters for
-        this chunk.
+        this chunk (the MTP draft itself is same-step — drafted from the
+        carried ``(mtp_h, tokens)`` pair at the top of each fused step and
+        verified against that step's sample, so no draft token needs to
+        live in the state).
         """
         B = batch
         return dict(
@@ -696,7 +811,6 @@ class Model:
             active=jnp.zeros((B,), bool),
             left=jnp.zeros((B,), jnp.int32),
             eos=-jnp.ones((B,), jnp.int32),
-            draft=-jnp.ones((B,), jnp.int32),
             rngs=jax.random.split(jax.random.PRNGKey(seed), B),
             tix=jnp.zeros((B,), jnp.int32),
             drafts=jnp.zeros((), jnp.int32),
@@ -711,9 +825,10 @@ class Model:
         Everything the per-token host loop used to do round-trips for
         happens on device: sampling (greedy, or temperature/top-k via
         per-slot request-seeded PRNG keys — see ``init_decode_state``),
-        per-slot EOS + budget masking, and — when
-        ``use_mtp`` — the MTP draft for the next step plus draft-acceptance
-        counting. One dispatch emits up to ``B*k`` tokens.
+        per-slot EOS + budget masking, and — when ``use_mtp`` — the
+        same-step MTP draft (drawn against the module's KV ring before the
+        main step, verified against the step's own sample) plus
+        draft-acceptance counting. One dispatch emits up to ``B*k`` tokens.
 
         state: see ``init_decode_state``. Returns ``(tokens (B,k),
         emitted (B,k) bool, cache, state)`` — tokens are -1 where the slot
@@ -746,7 +861,20 @@ class Model:
             cache, st = carry
             tok, pos = st["tokens"], st["positions"]
             active, left = st["active"], st["left"]
-            eos, draft = st["eos"], st["draft"]
+            eos = st["eos"]
+            if use_mtp:
+                # same-step speculation: draft from the carried pair
+                # (h_{p-1}, Emb(t_p)) against the MTP module's own KV ring
+                # *before* the main step, then verify against the token
+                # this step samples. Every active step drafts — the
+                # prompt's pairs were rung in at prefill, so the pair
+                # always exists.
+                d, ring = mtp_mod.mtp_draft_tokens(
+                    params, cache, cfg, tok, pos,
+                    embed_fn=lambda t: self._embed(params, t),
+                    unembed_fn=lambda hh: self._unembed(params, hh))
+                cache = dict(cache)
+                cache["mtp"] = ring
             logits, cache = self.decode_step(params, cache, tok[:, None],
                                              pos[:, None])
             # per-slot sampling keys: fold the slot's sample index into its
@@ -755,27 +883,20 @@ class Model:
             # re-dispatched on another replica reproduces its stream
             keys = jax.vmap(jax.random.fold_in)(st["rngs"], st["tix"])
             nxt = jax.vmap(sample)(logits[:, 0], keys)
-            # speculative accounting: did the previous step's draft match?
-            has_draft = active & (draft >= 0)
-            drafts = st["drafts"] + has_draft.sum(dtype=jnp.int32)
-            accepted = st["accepted"] + (
-                has_draft & (draft == nxt)).sum(dtype=jnp.int32)
+            if use_mtp:
+                drafts = st["drafts"] + active.sum(dtype=jnp.int32)
+                accepted = st["accepted"] + (
+                    active & (d == nxt)).sum(dtype=jnp.int32)
+            else:
+                drafts, accepted = st["drafts"], st["accepted"]
             emitted = jnp.where(active, nxt, -1)
             pos2 = pos + active
             left2 = left - active
             done = active & (((eos >= 0) & (nxt == eos)) | (left2 <= 0))
             active2 = active & ~done
             tok2 = jnp.where(active, nxt, tok)
-            if use_mtp:
-                d = mtp_mod.mtp_draft_tokens(
-                    params, cache, cfg, tok2, pos2,
-                    embed_fn=lambda t: self._embed(params, t),
-                    unembed_fn=lambda hh: self._unembed(params, hh))
-                draft2 = jnp.where(active2, d, -1)
-            else:
-                draft2 = jnp.full_like(draft, -1)
             st2 = dict(tokens=tok2, positions=pos2, active=active2,
-                       left=left2, eos=eos, draft=draft2, rngs=st["rngs"],
+                       left=left2, eos=eos, rngs=st["rngs"],
                        tix=st["tix"] + active, drafts=drafts,
                        accepted=accepted)
             return (cache, st2), (emitted, active)
@@ -785,6 +906,14 @@ class Model:
         return toks.T, was_active.T, cache, state
 
     # -- cache/init specs ----------------------------------------------------
+    def _init_mtp_ring(self, batch: int, max_len: int):
+        """MTP module 1's own KV ring: a 1-layer dense ring cache (the
+        module's block attends over its *pair* sequence, which pages would
+        buy nothing for — one layer, and evicted with the slot)."""
+        if self.cfg.attention == "mla":
+            return mla_mod.init_mla_cache(self.cfg, 1, batch, max_len)
+        return Lyr.init_gqa_cache(self.cfg, 1, batch, max_len)
+
     def init_cache(self, batch: int, max_len: int):
         cache: Dict[str, Any] = {}
         for seg in self.segments:
@@ -796,6 +925,7 @@ class Model:
             cache["memory"] = jnp.zeros((batch, n, cfg.d_model), cfg.dtype)
         if cfg.mtp:
             cache["mtp_h"] = jnp.zeros((batch, 1, cfg.d_model), cfg.dtype)
+            cache["mtp"] = self._init_mtp_ring(batch, max_len)
         return cache
 
     def cache_structs(self, batch: int, max_len: int):
@@ -820,6 +950,8 @@ class Model:
             axes["memory"] = 0
         if "mtp_h" in structs:
             axes["mtp_h"] = 0
+        if "mtp" in structs:   # layer-stacked (1, B, T, ...) ring
+            axes["mtp"] = jax.tree.map(lambda _: 1, structs["mtp"])
         return axes
 
     # -- paged cache family (block pool + page tables; core/paged.py) -------
@@ -864,16 +996,19 @@ class Model:
             cache["memory"] = jnp.zeros((batch, n, cfg.d_model), cfg.dtype)
         if cfg.mtp:
             cache["mtp_h"] = jnp.zeros((batch, 1, cfg.d_model), cfg.dtype)
+            cache["mtp"] = self._init_mtp_ring(batch, max_len)
         return cache
 
-    def paged_aux_axes(self) -> Dict[str, int]:
+    def paged_aux_axes(self) -> Dict[str, Any]:
         """Batch-axis declarations for the slot-resident leaves of a paged
         cache (the ones admission still splices densely)."""
-        axes: Dict[str, int] = {}
+        axes: Dict[str, Any] = {}
         if self.cfg.family in ("encdec", "vlm"):
             axes["memory"] = 0
         if self.cfg.mtp:
             axes["mtp_h"] = 0
+            axes["mtp"] = jax.tree.map(
+                lambda _: 1, jax.eval_shape(lambda: self._init_mtp_ring(1, 8)))
         return axes
 
     def prefill_to_pages(self, cache1, page_size: int, storage: str):
@@ -908,7 +1043,8 @@ class Model:
                                    for k in ("dense", "moe")}
             else:
                 pages[seg.name] = seg_pages(sub)
-        aux = {k: cache1[k] for k in ("memory", "mtp_h") if k in cache1}
+        aux = {k: cache1[k] for k in ("memory", "mtp_h", "mtp")
+               if k in cache1}
         return {"pages": pages, "aux": aux}
 
     def admit_pages(self, cache, payload_pages, ids, table_row, slot):

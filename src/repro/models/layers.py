@@ -205,26 +205,31 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
 
     new_cache = None
     if cache is not None and page_table is not None:
-        # paged decode: write k,v (B,1,KV,hd) into the slot's current page
-        # and attend over its gathered pages (core/paged.py layout)
+        # paged decode: write k,v (B,S,KV,hd) into the slot's pages and
+        # attend over its gathered pages (core/paged.py layout). S == 1 is
+        # the fused-decode step; S > 1 is a page-aligned chunked-prefill
+        # run written whole-pages-first (page_write_chunk).
         from repro.core import paged
+        S = x.shape[1]
         qpos = positions[:, 0]
         fp8 = "k_scale" in cache
         new_cache = dict(cache)
-        if fp8:
-            qk, sk = paged.quantize_vecs(k[:, 0], vec_ndim=2)
-            qv, sv = paged.quantize_vecs(v[:, 0], vec_ndim=2)
-            new_cache["k"] = paged.page_write(cache["k"], page_table, qpos, qk)
-            new_cache["v"] = paged.page_write(cache["v"], page_table, qpos, qv)
-            new_cache["k_scale"] = paged.page_write(
-                cache["k_scale"], page_table, qpos, sk)
-            new_cache["v_scale"] = paged.page_write(
-                cache["v_scale"], page_table, qpos, sv)
+        if S == 1:
+            def pwrite(pool, vals):
+                return paged.page_write(pool, page_table, qpos, vals[:, 0])
         else:
-            new_cache["k"] = paged.page_write(
-                cache["k"], page_table, qpos, k[:, 0])
-            new_cache["v"] = paged.page_write(
-                cache["v"], page_table, qpos, v[:, 0])
+            def pwrite(pool, vals):
+                return paged.page_write_chunk(pool, page_table, qpos, vals)
+        if fp8:
+            qk, sk = paged.quantize_vecs(k, vec_ndim=2)
+            qv, sv = paged.quantize_vecs(v, vec_ndim=2)
+            new_cache["k"] = pwrite(cache["k"], qk)
+            new_cache["v"] = pwrite(cache["v"], qv)
+            new_cache["k_scale"] = pwrite(cache["k_scale"], sk)
+            new_cache["v_scale"] = pwrite(cache["v_scale"], sv)
+        else:
+            new_cache["k"] = pwrite(cache["k"], k)
+            new_cache["v"] = pwrite(cache["v"], v)
         kc = paged.table_gather(new_cache["k"], page_table)
         vc = paged.table_gather(new_cache["v"], page_table)
         if fp8:

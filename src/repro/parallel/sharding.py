@@ -254,12 +254,8 @@ def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
     msize = mesh.shape[model_axis]
 
     def one(path, leaf):
-        name = None
-        for p in reversed(path):
-            k = getattr(p, "key", None)
-            if isinstance(k, str):
-                name = k
-                break
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), None)
         entries: list = [None] * leaf.ndim
         if name in ("memory", "mtp_h"):
             if leaf.shape[0] % dp_total == 0 and leaf.shape[0] > 0:
@@ -268,6 +264,23 @@ def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
             return NamedSharding(mesh, P(*entries))
         if name == "page_table":
             return NamedSharding(mesh, P())
+        if "mtp" in keys:
+            # the MTP module's KV ring is a dense (1, B, T, ...) subtree
+            # riding in the paged cache: the dense name rules apply (batch
+            # over dp, long axis over model), same as cache_pspecs
+            rule = _CACHE_AXES.get(name)
+            if rule is not None:
+                baxis, maxis = rule
+                baxis = baxis % leaf.ndim
+                if leaf.shape[baxis] % dp_total == 0:
+                    entries[baxis] = (tuple(dp_axes) if len(dp_axes) > 1
+                                      else dp_axes[0])
+                if maxis is not None:
+                    maxis = maxis % leaf.ndim
+                    if maxis != baxis and leaf.shape[maxis] % msize == 0 \
+                            and leaf.shape[maxis] >= msize:
+                        entries[maxis] = model_axis
+            return NamedSharding(mesh, P(*entries))
         ax = paged_mod.pool_model_axes(name, leaf.ndim)
         if ax is not None and leaf.shape[ax] % msize == 0 and \
                 leaf.shape[ax] >= msize:
@@ -276,14 +289,21 @@ def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
 
     paths = jax.tree_util.tree_flatten_with_path(cache_structs)[0]
     treedef = jax.tree.structure(cache_structs)
-    return jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
+    out = jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
+    if isinstance(out, dict) and "page_table" in out:
+        # the scheduler's COW prefix sharing aliases page-table rows across
+        # slots; every model column must see the identical full slot->page
+        # mapping, so the table's spec is pinned fully replicated — any
+        # future rule change that shards it should fail loudly here
+        assert out["page_table"].spec == P(), out["page_table"]
+    return out
 
 
 # per-slot decode-state leaves with a leading batch (slot) axis; the
 # chunk counters replicate. Name-driven because scalar counters would
 # otherwise be ambiguous against 1-d slot vectors.
 _STATE_BATCH_KEYS = ("tokens", "positions", "active", "left", "eos",
-                     "draft", "tix")
+                     "tix")
 
 
 def decode_state_shardings(mesh: Mesh, batch: int,

@@ -59,11 +59,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import paged as paged_mod
 from repro.models.api import Model, build_model
 from repro.parallel import context as pctx_mod
 
 # Smallest prefill bucket: prompts shorter than this share one compile.
 MIN_BUCKET = 8
+
+# Admission skip-ahead starvation guard: how many times smaller
+# lower-priority requests may jump a page-blocked head before the head
+# gets exclusive right to the next freed pages.
+STARVATION_LIMIT = 8
 
 
 class AdmissionError(RuntimeError):
@@ -91,6 +97,11 @@ class Request:
                                  # admission produces; a gateway retry
                                  # re-prefills prompt+delivered and sets
                                  # this to len(delivered)
+    priority: int = 0            # scheduler class: higher admits first and
+                                 # may preempt strictly-lower residents
+                                 # (evicted back to pending as a bitwise
+                                 # continuation); equal priorities stay
+                                 # FIFO
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -152,6 +163,7 @@ class ServeEngine:
                  pool_pages: Optional[int] = None,
                  page_storage: str = "fp8",
                  max_pending: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  ctx: Optional[pctx_mod.ParallelCtx] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -166,6 +178,21 @@ class ServeEngine:
         self.temperature = temperature
         self.top_k = top_k
         self.paged = paged
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if not paged:
+                raise ValueError(
+                    "prefill_chunk requires paged=True: chunked prefill "
+                    "streams the prompt straight into the slot's pages")
+            if prefill_chunk <= 0 or prefill_chunk % page_size:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) must be a positive "
+                    f"multiple of page_size ({page_size}) so every chunk "
+                    "writes whole pages")
+            if self.use_mtp:
+                raise ValueError(
+                    "prefill_chunk is incompatible with use_mtp: chunked "
+                    "prefill does not populate the MTP draft ring")
         if paged:
             # block-pool cache: pool_pages defaults to the dense engine's
             # token capacity (slots * max_len worth of pages) — same
@@ -178,7 +205,11 @@ class ServeEngine:
             self.page_storage = page_storage
             self.cache = self.model.init_paged_cache(
                 slots, max_len, page_size, self.pool_pages, page_storage)
-            self._free_pages: List[int] = list(range(self.pool_pages))
+            # refcounted page accounting + copy-on-write prefix index
+            # (host-side; prefix sharing only activates under chunked
+            # prefill, whose fixed chunk grid makes page contents a
+            # bitwise-pure function of the token prefix)
+            self._alloc = paged_mod.PrefixPageAllocator(self.pool_pages)
             self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
             self._aux_axes = self.model.paged_aux_axes()
         else:
@@ -194,7 +225,6 @@ class ServeEngine:
         self._tokens = np.zeros((slots,), np.int32)     # last emitted token
         self._left = np.zeros((slots,), np.int32)       # decode budget
         self._eos = np.full((slots,), -1, np.int32)
-        self._draft = np.full((slots,), -1, np.int32)
         # per-slot sampling PRNG: base key + next stream index. Sampling
         # key for a token is fold_in(rngs[i], tix[i]) — a pure function of
         # (request seed, stream position), so retried requests reproduce
@@ -204,11 +234,20 @@ class ServeEngine:
         self.pending: Deque[Tuple[Request, Optional[Dict]]] = \
             collections.deque()
         self.max_pending = max_pending
+        # scheduler state: slots mid-chunked-prefill, continuations of
+        # preempted residents still holding their indexed prefix pages,
+        # per-slot extras for eviction re-admission, and the admission
+        # skip-ahead counter for the starvation guard
+        self._prefilling: Dict[int, Dict[str, Any]] = {}
+        self._evicted: Dict[int, List[int]] = {}
+        self._slot_extras: List[Optional[Dict]] = [None] * slots
+        self._hol_skips = 0
         self._rng = jax.random.PRNGKey(seed + 1)
         self.stats = {"steps": 0, "tokens": 0, "accepted_drafts": 0,
                       "drafts": 0, "dispatches": 0, "prefills": 0,
                       "splices": 0, "first_tokens": 0, "page_admits": 0,
-                      "page_releases": 0, "peak_pages_used": 0}
+                      "page_releases": 0, "peak_pages_used": 0,
+                      "chunk_prefills": 0, "evictions": 0}
         # jit caches + trace counters (tests assert retrace bounds)
         self._prefill_fns: Dict[int, Any] = {}
         self._prefill_traces = 0
@@ -217,6 +256,8 @@ class ServeEngine:
         self._quant_traces = 0
         self._scatter_traces = 0
         self._release_traces = 0
+        self._chunk_traces = 0
+        self._table_traces = 0
         donate = jax.default_backend() != "cpu"
         # meshed engines pin the cache/state out-shardings to the input
         # shardings: without the pin, GSPMD could hand back a re-sharded
@@ -257,6 +298,31 @@ class ServeEngine:
             self._release_fn = jax.jit(
                 release, donate_argnums=(0,) if donate else (),
                 out_shardings=cache_out)
+
+            if self.prefill_chunk is not None:
+                def chunk_prefill(params, cache, tokens, pos, lengths,
+                                  row, slot):
+                    self._chunk_traces += 1
+                    return self.model.prefill_chunk(
+                        params, cache, tokens, pos, lengths, row, slot,
+                        pctx=self.ctx)
+
+                # logits are a fresh (1,1,V) payload; the cache carries
+                self._chunk_fn = jax.jit(
+                    chunk_prefill, donate_argnums=(1,) if donate else (),
+                    out_shardings=(None, cache_out) if self.meshed else None)
+
+                def table_install(cache, row, slot):
+                    self._table_traces += 1
+                    table = cache["page_table"]
+                    out = dict(cache)
+                    out["page_table"] = jax.lax.dynamic_update_slice(
+                        table, row[None].astype(table.dtype), (slot, 0))
+                    return out
+
+                self._table_fn = jax.jit(
+                    table_install, donate_argnums=(0,) if donate else (),
+                    out_shardings=cache_out)
         else:
             axes = self.model.cache_batch_axes(slots, max_len)
 
@@ -335,14 +401,18 @@ class ServeEngine:
         """How many times each jitted entry point has (re)traced — the
         compile-count contract: prefill ≤ #buckets, splice = 1,
         decode = 1 (paged engines: quant/scatter ≤ #buckets — page counts
-        follow the bucket — and release = 1). Benchmarks/tests assert
-        against this, not internals."""
+        follow the bucket — and release = 1; chunked-prefill engines:
+        chunk = 1 and table = 1, every chunk of every prompt shares one
+        static (1, prefill_chunk) shape). Benchmarks/tests assert against
+        this, not internals."""
         return {"prefill": self._prefill_traces,
                 "splice": self._splice_traces,
                 "decode": self._decode_traces,
                 "quant": self._quant_traces,
                 "scatter": self._scatter_traces,
-                "release": self._release_traces}
+                "release": self._release_traces,
+                "chunk": self._chunk_traces,
+                "table": self._table_traces}
 
     def decode_lowered_text(self) -> str:
         """StableHLO text of the fused decode chunk at this engine's
@@ -401,11 +471,14 @@ class ServeEngine:
         bucket), so admission is a pure splice. Paged engines: payload is
         the quantized page pytree from ``Model.prefill_to_pages`` —
         the disaggregation wire format (fp8 pages + per-token scales).
-        Used by admission here and by the disaggregated prefill pool."""
-        L = len(req.prompt)
+        Used by admission here and by the disaggregated prefill pool.
+        Requests with delivered tokens (scheduler continuations) prefill
+        prompt+delivered and sample at the advanced stream offset."""
+        prompt, _, offset = self._effective(req)
+        L = len(prompt)
         bucket = bucket_length(L, self.max_len)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        toks[0, :L] = prompt
         lengths = np.asarray([L], np.int32)
         self.stats["dispatches"] += 1
         self.stats["prefills"] += 1
@@ -420,8 +493,7 @@ class ServeEngine:
         # (engine-rng split for seedless requests)
         from repro.models.api import sample_logits
         if req.seed is not None:
-            sub = jax.random.fold_in(jax.random.PRNGKey(req.seed),
-                                     req.sample_offset)
+            sub = jax.random.fold_in(jax.random.PRNGKey(req.seed), offset)
         else:
             self._rng, sub = jax.random.split(self._rng)
         first = int(sample_logits(logits[0, -1], sub, self.temperature,
@@ -433,22 +505,54 @@ class ServeEngine:
         return [i for i, r in enumerate(self.active) if r is None]
 
     def free_pages(self) -> int:
-        """Unreserved pages in the pool (0 for dense engines)."""
-        return len(self._free_pages) if self.paged else 0
+        """Allocatable pages in the pool (0 for dense engines). Counts
+        both plain free pages and refcount-0 pages parked in the prefix
+        cache — the latter are reclaimed (LRU) when the plain pool runs
+        dry, so both are real capacity."""
+        return self._alloc.free_pages() if self.paged else 0
+
+    def _effective(self, req: Request) -> Tuple[np.ndarray, int, int]:
+        """Continuation-aware view of a request: ``(prompt, max_new,
+        sample_offset)``. A request with delivered tokens (a preempted
+        resident re-queued by the scheduler, or a gateway retry that kept
+        ``out``) resumes as prompt+delivered with the remaining budget and
+        an advanced stream offset — the seeded per-token sampling stream
+        makes the resumed tail bitwise-identical."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if req.out:
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.out, np.int32)])
+            return (prompt, req.max_new - len(req.out),
+                    req.sample_offset + len(req.out))
+        return prompt, req.max_new, req.sample_offset
 
     def pages_needed(self, req: Request) -> int:
         """Page budget a request reserves at admission: every position it
         can touch — prompt plus decode budget — rounded up to pages. The
         paged cache never ring-wraps, so this is also a hard bound."""
-        from repro.core import paged as paged_mod
         return paged_mod.pages_for(len(req.prompt) + req.max_new,
                                    self.page_size)
 
+    def _prefix_keys(self, prompt: np.ndarray) -> List[bytes]:
+        """Index keys for a prompt's full pages (chunked-prefill engines)."""
+        return paged_mod.prefix_keys(prompt, self.page_size,
+                                     len(prompt) // self.page_size)
+
     def can_admit(self, req: Request) -> bool:
-        """A slot is free and (paged engines) enough pool pages are too."""
+        """A slot is free and (paged engines) enough pool pages are too.
+        Chunked-prefill engines probe the prefix index: a request whose
+        leading pages are already resident needs fresh pages only from
+        the divergence point."""
         if not self.free_slots():
             return False
-        return not self.paged or self.pages_needed(req) <= self.free_pages()
+        if not self.paged:
+            return True
+        if self.prefill_chunk is None:
+            return self.pages_needed(req) <= self.free_pages()
+        prompt, max_new, _ = self._effective(req)
+        n = paged_mod.pages_for(len(prompt) + max_new, self.page_size)
+        return self._alloc.can_admit(self._prefix_keys(prompt), n,
+                                     self.prefill_chunk // self.page_size)
 
     def _validate_paged(self, req: Request):
         if not self.paged:
@@ -494,7 +598,7 @@ class ServeEngine:
         return first
 
     def admit_prefilled(self, req: Request, first: int, cache1,
-                        slot: int):
+                        slot: int, extras: Optional[Dict] = None):
         """Admit an already-prefilled request into ``slot``: one donated
         jitted splice of the prefill cache (dense), or a page reservation
         + quantized-page scatter + page-table install (paged), plus
@@ -502,16 +606,17 @@ class ServeEngine:
         prompt, so the first token (or an immediate EOS) can complete the
         request with zero decode steps — in that case the cache write is
         skipped entirely and no pages are reserved."""
-        finishes = (req.max_new <= 1
+        prompt, max_new, offset = self._effective(req)
+        finishes = (max_new <= 1
                     or (req.eos is not None and first == req.eos))
         if self.paged and not finishes:
             # capacity check BEFORE any bookkeeping mutates, so a raise
             # leaves the request/stats re-admittable as-is
-            n = self.pages_needed(req)
-            if n > len(self._free_pages):
+            n = paged_mod.pages_for(len(prompt) + max_new, self.page_size)
+            if n > self.free_pages():
                 raise AdmissionError(
                     f"no free pages: request {req.rid} needs {n}, pool has "
-                    f"{len(self._free_pages)} of {self.pool_pages}; drive "
+                    f"{self.free_pages()} of {self.pool_pages}; drive "
                     "step() until a request completes, or submit() to "
                     "queue (see free_pages())")
         req.out.append(first)
@@ -522,7 +627,7 @@ class ServeEngine:
             return
         self.stats["dispatches"] += 1
         if self.paged:
-            alloc = [self._free_pages.pop() for _ in range(n)]
+            alloc = self._alloc.alloc(n)
             self._slot_pages[slot] = alloc
             trash = self.pool_pages
             row = np.full((self.pages_per_slot,), trash, np.int32)
@@ -533,7 +638,7 @@ class ServeEngine:
             ids = np.asarray([alloc[i] if i < n else trash
                               for i in range(n_p)], np.int32)
             self.stats["page_admits"] += 1
-            used = self.pool_pages - len(self._free_pages)
+            used = self.pool_pages - self.free_pages()
             self.stats["peak_pages_used"] = max(
                 self.stats["peak_pages_used"], used)
             self.cache = self._scatter_fn(
@@ -542,28 +647,243 @@ class ServeEngine:
         else:
             self.stats["splices"] += 1
             self.cache = self._splice_fn(self.cache, cache1, slot)
-        self.positions[slot] = len(req.prompt)
+        self.positions[slot] = len(prompt)
         self._tokens[slot] = first
-        self._left[slot] = req.max_new - 1
+        self._left[slot] = max_new - 1
         self._eos[slot] = -1 if req.eos is None else req.eos
-        self._draft[slot] = -1
         if req.seed is not None:
             base = jax.random.PRNGKey(req.seed)
         else:
             self._rng, base = jax.random.split(self._rng)
         self._rngs[slot] = np.asarray(base, np.uint32)
-        self._tix[slot] = req.sample_offset + 1   # prefill consumed
-                                                  # stream index offset
+        self._tix[slot] = offset + 1   # prefill consumed
+                                       # stream index offset
+        self._slot_extras[slot] = extras
         self.active[slot] = req
 
-    def _admit_pending(self):
-        while self.pending and self.free_slots():
-            req, extras = self.pending[0]
-            if not self.can_admit(req):
-                break     # FIFO head-of-line: wait for pages to recycle
-            self.pending.popleft()
+    # -- scheduler ----------------------------------------------------------
+    def _admit_now(self, req: Request, extras: Optional[Dict]):
+        slot = self.free_slots()[0]
+        if self.prefill_chunk is not None:
+            self._admit_chunked(req, extras, slot)
+        else:
             first, cache1 = self.prefill_request(req, extras)
-            self.admit_prefilled(req, first, cache1, self.free_slots()[0])
+            self.admit_prefilled(req, first, cache1, slot, extras=extras)
+
+    def _admit_chunked(self, req: Request, extras: Optional[Dict],
+                       slot: int):
+        """Reserve pages (claiming any indexed prefix run) and install the
+        slot's page-table row; the prompt itself streams through
+        ``_run_prefill_chunk`` one chunk per ``step()``. Pages claimed
+        from the prefix index are shared and immutable — the chunks that
+        would have computed them are skipped, and fresh pages take over
+        from the divergence point (the copy-on-write fork)."""
+        if extras:
+            raise ValueError(
+                "prefill_chunk admission does not support extras "
+                "(encoder/vision payloads need whole-prompt prefill)")
+        prompt, max_new, offset = self._effective(req)
+        L, p, C = len(prompt), self.page_size, self.prefill_chunk
+        n = paged_mod.pages_for(L + max_new, p)
+        keys = self._prefix_keys(prompt)
+        held = self._evicted.pop(req.rid, None)
+        if held is not None:
+            # a resuming continuation re-claims its retained prefix pages
+            # through the index below (they stay indexed, so the admit()
+            # hit run picks them straight back up)
+            self._alloc.release(held)
+        try:
+            hits, fresh = self._alloc.admit(keys, n, C // p)
+        except RuntimeError as e:
+            raise AdmissionError(
+                f"no free pages: request {req.rid} needs up to {n}, pool "
+                f"has {self.free_pages()} of {self.pool_pages}; drive "
+                "step() until a request completes, or submit() to "
+                "queue (see free_pages())") from e
+        pages = hits + fresh
+        self._slot_pages[slot] = pages
+        self._slot_extras[slot] = extras
+        trash = self.pool_pages
+        row = np.full((self.pages_per_slot,), trash, np.int32)
+        row[:n] = pages
+        self.stats["page_admits"] += 1
+        used = self.pool_pages - self.free_pages()
+        self.stats["peak_pages_used"] = max(
+            self.stats["peak_pages_used"], used)
+        # the row travels as a chunk operand; the cache's own row keeps
+        # pointing at the trash page until graduation, so this slot's
+        # masked lane in the decode dispatches interleaved with the
+        # remaining chunks cannot write into the pages being filled
+        # shared pages cover whole chunks, so prefill resumes at the
+        # divergence chunk; never skip past the chunk holding the last
+        # prompt token — its logits seed the first sampled token (a full
+        # re-run of that chunk writes bitwise-identical bytes back into
+        # any shared pages it overlaps)
+        skip = min(len(hits) * p, (L - 1) // C * C)
+        self._prefilling[slot] = dict(req=req, keys=keys, next=skip,
+                                      prompt=prompt, max_new=max_new,
+                                      offset=offset, row=row)
+        self.active[slot] = req
+
+    def _run_prefill_chunk(self, slot: int):
+        """Advance one prefilling slot by one chunk; the final chunk
+        samples the first token and graduates the slot to decoding."""
+        ps = self._prefilling[slot]
+        req, prompt = ps["req"], ps["prompt"]
+        C, p, L = self.prefill_chunk, self.page_size, len(prompt)
+        start = ps["next"]
+        toks = np.zeros((1, C), np.int32)
+        end = min(L, start + C)
+        toks[0, :end - start] = prompt[start:end]
+        pos = np.arange(start, start + C, dtype=np.int32)[None]
+        self.stats["dispatches"] += 1
+        self.stats["chunk_prefills"] += 1
+        logits, self.cache = self._chunk_fn(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray([L], jnp.int32), jnp.asarray(ps["row"][None]), slot)
+        # index the chunk's freshly-written full prompt pages: their
+        # content is a bitwise-pure function of the token prefix under the
+        # fixed chunk grid, and the write is already dispatched, so device
+        # ordering guarantees write-before-any-sharer-read
+        for j in range(start // p, min((start + C) // p, len(ps["keys"]))):
+            self._alloc.register(ps["keys"][j], self._slot_pages[slot][j])
+        ps["next"] = start + C
+        if ps["next"] < L:
+            return
+        del self._prefilling[slot]
+        # graduation: the slot decodes from the next dispatch on, so its
+        # real page-table row replaces the trash row now
+        self.stats["dispatches"] += 1
+        self.cache = self._table_fn(self.cache, jnp.asarray(ps["row"]),
+                                    slot)
+        from repro.models.api import sample_logits
+        if req.seed is not None:
+            sub = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                     ps["offset"])
+            base = jax.random.PRNGKey(req.seed)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            self._rng, base = jax.random.split(self._rng)
+        first = int(sample_logits(logits[0, -1], sub, self.temperature,
+                                  self.top_k))
+        req.out.append(first)
+        self.stats["tokens"] += 1
+        self.stats["first_tokens"] += 1
+        if ps["max_new"] <= 1 or (req.eos is not None and first == req.eos):
+            # zero decode steps: the whole reservation (including the
+            # never-touched budget tail) goes straight back to the pool
+            req.done = True
+            self._release_slot(slot)
+            return
+        self.positions[slot] = L
+        self._tokens[slot] = first
+        self._left[slot] = ps["max_new"] - 1
+        self._eos[slot] = -1 if req.eos is None else req.eos
+        self._rngs[slot] = np.asarray(base, np.uint32)
+        self._tix[slot] = ps["offset"] + 1
+
+    def _pick_admission(self) -> Optional[int]:
+        """Index of the pending entry to admit next: highest priority
+        first, FIFO within a class, with page-aware skip-ahead — a
+        page-blocked request lets smaller ones jump it until the
+        starvation guard trips, after which only the head may admit."""
+        order = sorted(range(len(self.pending)),
+                       key=lambda i: (-self.pending[i][0].priority, i))
+        for rank, i in enumerate(order):
+            if self.can_admit(self.pending[i][0]):
+                if rank == 0:
+                    self._hol_skips = 0
+                elif self._hol_skips >= STARVATION_LIMIT:
+                    return None   # head starved: next pages are its
+                else:
+                    self._hol_skips += 1
+                return i
+        return None
+
+    def _try_evict(self, inc: int) -> bool:
+        """Free capacity for an incoming priority-``inc`` request: evict
+        the lowest-priority resident whose priority is strictly lower,
+        or — when no resident qualifies — reclaim the retained prefix
+        pages of a strictly-lower-priority evicted continuation (it will
+        re-prefill; its token stream stays bitwise-identical either way).
+        Returns False when nothing can be preempted."""
+        victims = [(self.active[s].priority, s) for s in range(self.slots)
+                   if self.active[s] is not None
+                   and s not in self._prefilling
+                   and self.active[s].priority < inc]
+        if victims:
+            self._evict_slot(min(victims)[1])
+            return True
+        held = [(req.priority, i) for i, (req, _) in
+                enumerate(self.pending)
+                if req.priority < inc and req.rid in self._evicted]
+        if held:
+            rid = self.pending[min(held)[1]][0].rid
+            self._alloc.release(self._evicted.pop(rid))
+            return True
+        return False
+
+    def _evict_slot(self, slot: int):
+        """Preempt a resident: free its slot and pages and push it back
+        to pending as a continuation (prompt+delivered, remaining budget,
+        advanced stream offset — the seeded sampling stream makes the
+        resumed tail bitwise-identical). Under chunked prefill the
+        continuation's full written pages are indexed first and their
+        refcounts retained in ``_evicted``, so resume re-claims the KV it
+        already computed instead of recomputing it."""
+        req = self.active[slot]
+        extras = self._slot_extras[slot]
+        held: List[int] = []
+        if self.paged and self.prefill_chunk is not None:
+            pages = self._slot_pages[slot]
+            prompt, _, _ = self._effective(req)
+            # KV coverage stops at the *written* prefix: the last emitted
+            # token's KV lands only when it is fed, so positions[slot]
+            # (== len(prompt+out) - 1) bounds the indexable pages
+            n_keys = min(int(self.positions[slot]) // self.page_size,
+                         len(pages))
+            keys = paged_mod.prefix_keys(prompt, self.page_size, n_keys)
+            for j, key in enumerate(keys):
+                self._alloc.register(key, pages[j])
+                if self._alloc.lookup(key) != pages[j]:
+                    break   # another slot owns this prefix from here on
+                held.append(pages[j])
+            if held:
+                self._evicted[req.rid] = held
+                self._slot_pages[slot] = pages[len(held):]
+        self.stats["evictions"] += 1
+        self._release_slot(slot)
+        self.pending.appendleft((req, extras))
+
+    def _admit_pending(self):
+        while self.pending:
+            i = self._pick_admission()
+            if i is not None:
+                req, extras = self.pending[i]
+                del self.pending[i]
+                self._admit_now(req, extras)
+                continue
+            # Everything admissible is in; preempt for the
+            # highest-priority blocked entry. Capacity freed here is
+            # reserved for that entry alone — letting a lower-priority
+            # request (often the just-evicted victim, cheap to resume
+            # via its retained prefix) grab it would thrash.
+            head_i = max(range(len(self.pending)),
+                         key=lambda j: (self.pending[j][0].priority, -j))
+            head = self.pending[head_i][0]
+            if not self._try_evict(head.priority):
+                break
+            while not self.can_admit(head) and self._try_evict(head.priority):
+                pass
+            if not self.can_admit(head):
+                break
+            # indices shifted (eviction re-queues at the left): relocate
+            # the head by identity before admitting it
+            head_i = next(j for j, (q, _) in enumerate(self.pending)
+                          if q is head)
+            req, extras = self.pending[head_i]
+            del self.pending[head_i]
+            self._admit_now(req, extras)
 
     # -- decode -------------------------------------------------------------
     def _device_state(self) -> Dict[str, Any]:
@@ -574,11 +894,13 @@ class ServeEngine:
         st = dict(
             tokens=jnp.asarray(self._tokens),
             positions=jnp.asarray(self.positions),
-            active=jnp.asarray(np.array([r is not None
-                                         for r in self.active])),
+            # slots mid-chunked-prefill are occupied but not yet decoding:
+            # masked out of the fused loop until their prompt completes
+            active=jnp.asarray(np.array(
+                [r is not None and i not in self._prefilling
+                 for i, r in enumerate(self.active)])),
             left=jnp.asarray(self._left),
             eos=jnp.asarray(self._eos),
-            draft=jnp.asarray(self._draft),
             rngs=jnp.asarray(self._rngs),
             tix=jnp.asarray(self._tix),
             drafts=jnp.zeros((), jnp.int32),
@@ -591,10 +913,19 @@ class ServeEngine:
         return st
 
     def step(self):
-        """Refill slots from the pending queue, then run one fused
-        ``chunk``-step decode dispatch over all slots."""
+        """One scheduler tick: admit from the pending queue (priority
+        order, page-aware, preempting lower-priority residents when a
+        higher-priority arrival is blocked), advance one chunked-prefill
+        slot by one chunk, then run one fused ``chunk``-step decode
+        dispatch over the decoding slots."""
         self._admit_pending()
-        if not any(r is not None for r in self.active):
+        if self._prefilling:
+            # one chunk for one long-prompt admission per tick, so
+            # resident decode streams keep flowing between chunks (no
+            # TTFT cliff for requests queued behind a long prompt)
+            self._run_prefill_chunk(min(self._prefilling))
+        if not any(r is not None and i not in self._prefilling
+                   for i, r in enumerate(self.active)):
             return
         self.stats["dispatches"] += 1
         toks, emitted, self.cache, st = self._decode_fn(
@@ -606,18 +937,25 @@ class ServeEngine:
         toks, emitted, host = jax.device_get(
             (toks, emitted, {k: st[k] for k in
                              ("tokens", "positions", "active", "left",
-                              "draft", "tix", "drafts", "accepted")}))
+                              "tix", "drafts", "accepted")}))
         self.stats["steps"] += int(emitted.any(axis=0).sum())
         self.stats["drafts"] += int(host["drafts"])
         self.stats["accepted_drafts"] += int(host["accepted"])
-        # copy: device_get arrays are read-only, mirrors are written on admit
-        self._tokens = np.array(host["tokens"])
-        self.positions = np.array(host["positions"])
-        self._left = np.array(host["left"])
-        self._draft = np.array(host["draft"])
-        self._tix = np.array(host["tix"])
+        # copy: device_get arrays are read-only, mirrors are written on
+        # admit. Prefilling slots keep their host-written mirrors — their
+        # masked decode lanes carry stale device state
+        keep = np.array([i in self._prefilling
+                         for i in range(self.slots)])
+        self._tokens = np.where(keep, self._tokens,
+                                host["tokens"]).astype(np.int32)
+        self.positions = np.where(keep, self.positions,
+                                  host["positions"]).astype(np.int32)
+        self._left = np.where(keep, self._left,
+                              host["left"]).astype(np.int32)
+        self._tix = np.where(keep, self._tix,
+                             host["tix"]).astype(np.int32)
         for i, r in enumerate(self.active):
-            if r is None:
+            if r is None or keep[i]:
                 continue
             new = toks[i, emitted[i]]
             r.out.extend(int(t) for t in new)
@@ -627,29 +965,38 @@ class ServeEngine:
                 self._release_slot(i)
 
     def _release_slot(self, slot: int):
-        """Free ``slot``: clear occupancy and (paged) recycle its pages —
-        the slot's table row is re-pointed at the trash page so its masked
-        decode lane can't write into a new owner's pages."""
+        """Free ``slot``: clear occupancy and (paged) drop one reference
+        per reserved page — the whole reservation, including any
+        never-written budget tail left by early EOS, returns to the pool
+        at once. The slot's table row is re-pointed at the trash page so
+        its masked decode lane can't write into a new owner's pages."""
         self.active[slot] = None
+        self._slot_extras[slot] = None
         if self.paged and self._slot_pages[slot]:
-            self._free_pages.extend(self._slot_pages[slot])
+            self._alloc.release(self._slot_pages[slot])
             self._slot_pages[slot] = []
             self.stats["dispatches"] += 1
             self.stats["page_releases"] += 1
             self.cache = self._release_fn(self.cache, slot)
 
     def cancel(self, rid: int) -> bool:
-        """Abort a request by id: drop it from the pending queue, or free
-        its slot (pages recycled; the lane is masked out of the next
-        dispatch). The Request object is left as-is — ``done`` stays
+        """Abort a request by id: drop it from the pending queue (an
+        evicted-but-not-resumed continuation also releases the prefix
+        refcounts it retained), or free its slot — mid-chunked-prefill or
+        decoding alike (pages recycled; the lane is masked out of the
+        next dispatch). The Request object is left as-is — ``done`` stays
         False, ``out`` keeps whatever was delivered — so a gateway can
         re-dispatch it as a continuation. Returns False if unknown."""
         for i, (req, _) in enumerate(self.pending):
             if req.rid == rid:
                 del self.pending[i]
+                held = self._evicted.pop(rid, None)
+                if held:
+                    self._alloc.release(held)
                 return True
         for slot, req in enumerate(self.active):
             if req is not None and req.rid == rid:
+                self._prefilling.pop(slot, None)
                 self._release_slot(slot)
                 return True
         return False
@@ -659,11 +1006,24 @@ class ServeEngine:
         if not self.paged:
             return dict(pages_total=0, pages_free=0, pages_used=0,
                         occupancy=0.0)
-        used = self.pool_pages - len(self._free_pages)
+        free = self.free_pages()
+        used = self.pool_pages - free
         return dict(pages_total=self.pool_pages,
-                    pages_free=len(self._free_pages), pages_used=used,
+                    pages_free=free, pages_used=used,
                     occupancy=used / self.pool_pages if self.pool_pages
                     else 0.0)
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Prefix-index effectiveness (zeros for dense / non-chunked
+        engines): admission-time page lookups vs hits, plus how many
+        pages currently back index entries. The gateway's cache-aware
+        router reads this to weigh prefix affinity against load."""
+        if not self.paged:
+            return dict(lookups=0, hits=0, hit_rate=0.0, indexed_pages=0)
+        lk = self._alloc.prefix_lookups
+        return dict(lookups=lk, hits=self._alloc.prefix_hits,
+                    hit_rate=self._alloc.prefix_hits / lk if lk else 0.0,
+                    indexed_pages=self._alloc.indexed_pages())
 
     def cache_bytes_per_token(self) -> float:
         """Attention-cache bytes per token of context capacity — the

@@ -128,6 +128,8 @@ class Replica:
     load: int = 0
     occupancy: float = 0.0
     free_pages: int = 0
+    prefix_hit_rate: float = 0.0
+    indexed_pages: int = 0
 
     def report(self):
         """Refresh the load report (called on each heartbeat)."""
@@ -138,6 +140,9 @@ class Replica:
         if eng.paged:
             self.occupancy = max(slot_occ, eng.pool_stats()["occupancy"])
             self.free_pages = eng.free_pages()
+            ps = eng.prefix_stats()
+            self.prefix_hit_rate = ps["hit_rate"]
+            self.indexed_pages = ps["indexed_pages"]
         else:
             self.occupancy = slot_occ
             self.free_pages = 0
@@ -208,11 +213,18 @@ class Router:
     a replica that accepts work and fails it."""
 
     def __init__(self, threshold: int = 3, cooldown: int = 6,
-                 affinity_prefix: int = 8, affinity_slack: int = 2):
+                 affinity_prefix: int = 8, affinity_slack: int = 2,
+                 cache_threshold: float = 0.9):
         self.threshold = threshold
         self.cooldown = cooldown
         self.affinity_prefix = affinity_prefix
         self.affinity_slack = affinity_slack
+        # cache-aware cutoff: above this pool occupancy the affine
+        # replica's prefix pages are at eviction risk and admission may
+        # block on pages, so the router stops honoring affinity and falls
+        # back to least-loaded (the sglang-style cache_threshold policy,
+        # fed by the occupancy each heartbeat piggybacks)
+        self.cache_threshold = cache_threshold
         self.affinity_hits = 0
         self._affinity: Dict[int, int] = {}    # prefix hash -> replica id
 
@@ -239,7 +251,9 @@ class Router:
               tick: int) -> Optional[Replica]:
         """Pick a replica for ``gr`` (None = nothing routable). Prefers
         the prefix-affinity replica when its load is within
-        ``affinity_slack`` of the least-loaded candidate."""
+        ``affinity_slack`` of the least-loaded candidate and its pool
+        occupancy is below ``cache_threshold`` (a saturated pool would
+        not hold the prefix pages anyway)."""
         cands = self.routable(reps, tick)
         if not cands:
             return None
@@ -250,7 +264,8 @@ class Router:
         if aff_rid is not None:
             aff = next((r for r in cands if r.rid == aff_rid), None)
             if aff is not None and aff.load <= best.load + \
-                    self.affinity_slack:
+                    self.affinity_slack and \
+                    aff.occupancy < self.cache_threshold:
                 pick = aff
                 self.affinity_hits += 1
         self._affinity[key] = pick.rid
@@ -283,10 +298,12 @@ class Gateway:
                  paged: bool = False, page_size: int = 8,
                  pool_pages: Optional[int] = None,
                  page_storage: str = "fp8",
+                 prefill_chunk: Optional[int] = None,
                  max_pending: int = 64,
                  engine_max_pending: Optional[int] = 8,
                  suspect_after: int = 2, dead_after: int = 4,
                  circuit_threshold: int = 3, circuit_cooldown: int = 6,
+                 cache_threshold: float = 0.9,
                  shed_watermark: float = 0.9, shed_min_priority: int = 0,
                  max_retries: int = 2,
                  injector: Optional[ServeFaultInjector] = None):
@@ -294,7 +311,8 @@ class Gateway:
             raise ValueError("need at least one replica")
         self.cfg = cfg
         self.registry = ReplicaRegistry(suspect_after, dead_after)
-        self.router = Router(circuit_threshold, circuit_cooldown)
+        self.router = Router(circuit_threshold, circuit_cooldown,
+                             cache_threshold=cache_threshold)
         self.injector = injector
         self.max_pending = max_pending
         self.shed_watermark = shed_watermark
@@ -320,6 +338,7 @@ class Gateway:
                               paged=paged, page_size=page_size,
                               pool_pages=pool_pages,
                               page_storage=page_storage,
+                              prefill_chunk=prefill_chunk,
                               max_pending=engine_max_pending)
             if params is None:
                 params = eng.params       # one parameter set, N replicas
@@ -529,7 +548,8 @@ class Gateway:
                   if gr.delivered else gr.prompt)
         ereq = Request(self._next_engine_rid, prompt.astype(np.int32),
                        max_new=gr.max_new - len(gr.delivered), eos=gr.eos,
-                       seed=gr.seed, sample_offset=len(gr.delivered))
+                       seed=gr.seed, sample_offset=len(gr.delivered),
+                       priority=gr.priority)
         try:
             if inj is not None:
                 inj.check_alive(rep.rid)

@@ -50,6 +50,41 @@ def test_bf16_parity_gate_fires():
     assert any("bitwise-equal" in e for e in errs)
 
 
+def test_mtp_dead_path_gate_fires():
+    """mtp_acceptance == 0.0 is the signature of the context-free draft
+    bug (no KV ring): the validator must reject it, not shrug."""
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    hit = False
+    for row in doc["rows"]:
+        if "mtp_acceptance" in row:
+            row["mtp_acceptance"] = 0.0
+            hit = True
+    assert hit, "committed artifact must carry an MTP-probed dense row"
+    errs = check_bench.validate_serve(doc)
+    assert any("draft path is dead" in e for e in errs)
+
+
+def test_prefix_pages_saved_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    hit = False
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-bf16-shared-prefix":
+            row["pages_saved_vs_unshared"] = 1.5
+            hit = True
+    assert hit, "committed artifact must carry the shared-prefix row"
+    errs = check_bench.validate_serve(doc)
+    assert any("prefix COW gate" in e for e in errs)
+
+
+def test_prefix_parity_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-bf16-shared-prefix":
+            row["tokens_equal_unshared"] = False
+    errs = check_bench.validate_serve(doc)
+    assert any("COW pages must be read-only" in e for e in errs)
+
+
 def test_missing_schema_key_fires():
     doc = copy.deepcopy(load("BENCH_serve.json"))
     del doc["rows"][0]["tokens_per_s"]

@@ -147,6 +147,33 @@ class TestPageGranularAdmission:
                              page_storage="bf16")
         assert [r.out for r in reqs] == ref
 
+    def test_early_eos_releases_whole_reservation(self, gqa_cfg):
+        """A request that hits EOS long before max_new must return its
+        entire page reservation — including the never-written budget
+        tail — to the pool at completion, on both the whole-prompt and
+        the chunked-prefill admission paths."""
+        probe_eng = ServeEngine(gqa_cfg, slots=1, max_len=64, seed=0,
+                                chunk=4, paged=True, page_size=8,
+                                page_storage="bf16")
+        probe = Request(0, np.arange(5), max_new=8)
+        probe_eng.add_request(probe)
+        probe_eng.run_until_done()
+        eos = probe.out[2]                   # fires after ~3 tokens
+        for pc in (None, 8):
+            eng = ServeEngine(gqa_cfg, params=probe_eng.params, slots=1,
+                              max_len=64, seed=0, chunk=4, paged=True,
+                              page_size=8, pool_pages=8,
+                              page_storage="bf16", prefill_chunk=pc)
+            baseline = eng.free_pages()
+            assert baseline == 8
+            r = Request(1, np.arange(5), max_new=40, eos=eos)
+            assert eng.pages_needed(r) == 6  # full-budget reservation
+            eng.submit(r)
+            eng.run_until_done()
+            assert r.done and r.out[-1] == eos
+            assert len(r.out) < 40           # stopped early
+            assert eng.free_pages() == baseline, pc
+
     def test_pages_reserved_matches_budget_not_max_len(self, gqa_cfg):
         """A 5+6-token request on a max_len=32 engine reserves 2 pages of
         8, not the 4-page dense-equivalent ring — the capacity lever."""

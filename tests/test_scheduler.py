@@ -1,0 +1,387 @@
+"""Continuous-batching scheduler (ISSUE 8 tentpole): chunked prefill
+interleaved with decode, priority preemption with bitwise-identical
+resume, and copy-on-write prefix page sharing over the paged pool."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import paged as paged_mod
+from repro.serve.engine import (STARVATION_LIMIT, AdmissionError, Request,
+                                ServeEngine)
+
+
+@pytest.fixture(scope="module")
+def gqa_cfg():
+    return smoke_config(get_config("qwen3-14b"))
+
+
+@pytest.fixture(scope="module")
+def shared_params(gqa_cfg):
+    """One parameter tree for every engine in the module, so token
+    streams are comparable across engines."""
+    return ServeEngine(gqa_cfg, slots=1, max_len=32, seed=0).params
+
+
+def _mk(cfg, params, *, pool=24, slots=2, max_len=64, prefill_chunk=8,
+        **kw):
+    return ServeEngine(cfg, params=params, slots=slots, max_len=max_len,
+                       seed=0, chunk=4, paged=True, page_size=8,
+                       pool_pages=pool, page_storage="bf16",
+                       prefill_chunk=prefill_chunk, **kw)
+
+
+def _prompt(rng, n):
+    return rng.integers(1, 500, size=n).astype(np.int32)
+
+
+class TestChunkedPrefill:
+    def test_matches_whole_prompt_prefill_bitwise(self, gqa_cfg,
+                                                  shared_params):
+        """bf16 pages + greedy: streaming the prompt in page-aligned
+        chunks must reproduce the whole-prompt (bucketed) prefill token
+        stream bitwise — same KV bytes land in the same logical rows."""
+        rng = np.random.default_rng(3)
+        prompts = [_prompt(rng, n) for n in (21, 13, 34)]
+        outs = {}
+        for pc in (None, 8, 16):
+            eng = _mk(gqa_cfg, shared_params, prefill_chunk=pc)
+            reqs = [Request(i, p, max_new=8, seed=5 + i)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_done()
+            assert all(r.done for r in reqs)
+            outs[pc] = [r.out for r in reqs]
+            assert eng.free_pages() == 24        # full recycle
+        assert outs[8] == outs[None]
+        assert outs[16] == outs[None]
+
+    def test_constructor_validation(self, gqa_cfg, shared_params):
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(gqa_cfg, params=shared_params, slots=1,
+                        max_len=32, prefill_chunk=8)
+        with pytest.raises(ValueError, match="multiple"):
+            _mk(gqa_cfg, shared_params, prefill_chunk=12)
+        cfg = smoke_config(get_config("deepseek-v3-671b"))
+        with pytest.raises(ValueError, match="use_mtp"):
+            ServeEngine(cfg, slots=1, max_len=32, paged=True, page_size=8,
+                        prefill_chunk=8, use_mtp=True)
+
+    def test_chunk_and_table_compile_once_across_slots(self, gqa_cfg,
+                                                       shared_params):
+        """The chunk step and table install trace once: slot index and
+        chunk offset are runtime values, prompt length only enters via
+        the traced lengths operand."""
+        rng = np.random.default_rng(4)
+        eng = _mk(gqa_cfg, shared_params, slots=3)
+        reqs = [Request(i, _prompt(rng, 9 + 5 * i), max_new=4)
+                for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        assert all(r.done for r in reqs)
+        assert eng.trace_counts["chunk"] == 1
+        assert eng.trace_counts["table"] == 1
+        assert eng.trace_counts["prefill"] == 0   # never whole-prompt
+        assert eng.stats["chunk_prefills"] >= 10
+
+    def test_decode_keeps_flowing_during_long_prefill(self, gqa_cfg,
+                                                      shared_params):
+        """The interleaving contract: while a long prompt streams in one
+        chunk per tick, an already-resident request still emits a full
+        decode chunk every tick — no TTFT cliff for the resident."""
+        rng = np.random.default_rng(5)
+        eng = _mk(gqa_cfg, shared_params, pool=24, max_len=64)
+        resident = Request(0, _prompt(rng, 9), max_new=40, seed=1)
+        eng.submit(resident)
+        eng.step()
+        long = Request(1, _prompt(rng, 48), max_new=8, seed=2)
+        eng.submit(long)
+        while eng._prefilling:
+            before = len(resident.out)
+            eng.step()
+            if eng._prefilling and not resident.done:
+                # a prefill chunk ran AND the resident advanced
+                assert len(resident.out) > before
+        eng.run_until_done()
+        assert resident.done and long.done
+
+
+class TestPrefixSharing:
+    def test_shared_prefix_bitwise_and_pages_saved(self, gqa_cfg,
+                                                   shared_params):
+        """Copy-on-write: staggered requests sharing a 2-page prefix must
+        (a) reuse the prefix pages (admission hits), (b) produce streams
+        bitwise-identical to an unshared engine, and (c) return every
+        page at completion."""
+        rng = np.random.default_rng(7)
+        prefix = _prompt(rng, 16)                       # 2 full pages
+        tails = [_prompt(rng, 5), _prompt(rng, 7), _prompt(rng, 3)]
+        prompts = [np.concatenate([prefix, t]) for t in tails]
+
+        # unshared baseline: one engine per request, nothing to share
+        base = []
+        for i, p in enumerate(prompts):
+            eng = _mk(gqa_cfg, shared_params)
+            r = Request(i, p, max_new=6, seed=20 + i)
+            eng.submit(r)
+            eng.run_until_done()
+            base.append(r.out)
+
+        eng = _mk(gqa_cfg, shared_params, slots=3)
+        reqs = [Request(i, p, max_new=6, seed=20 + i)
+                for i, p in enumerate(prompts)]
+        peak_unshared = sum(eng.pages_needed(r) for r in reqs)
+        # staggered arrival: two ticks per request so both prefix chunks
+        # run (and index their pages) before the next sharer admits
+        for r in reqs:
+            eng.submit(r)
+            eng.step()
+            eng.step()
+        eng.run_until_done()
+        assert [r.out for r in reqs] == base            # bitwise
+        st = eng.prefix_stats()
+        assert st["hits"] == 4                          # 2 pages x 2 sharers
+        assert st["hit_rate"] > 0
+        assert eng.stats["peak_pages_used"] <= peak_unshared - st["hits"]
+        assert eng.free_pages() == 24                   # refcounts drained
+
+    def test_divergence_never_mutates_shared_pages(self, gqa_cfg,
+                                                   shared_params):
+        """A sharer's writes go to its own fresh pages: the shared prefix
+        pages must be byte-identical before and after a divergent request
+        admits, decodes, and completes on top of them."""
+        rng = np.random.default_rng(8)
+        prefix = _prompt(rng, 16)
+        eng = _mk(gqa_cfg, shared_params, slots=2)
+        r0 = Request(0, np.concatenate([prefix, _prompt(rng, 4)]),
+                     max_new=24, seed=1)               # stays resident
+        eng.submit(r0)
+        eng.step(); eng.step(); eng.step()
+        shared = eng._slot_pages[0][:2]
+        assert all(eng._alloc.is_indexed(pid) for pid in shared)
+        seg = eng.model.segments[0].name
+        before = {pid: np.asarray(eng.cache[seg]["k"][:, pid]).copy()
+                  for pid in shared}
+        r1 = Request(1, np.concatenate([prefix, _prompt(rng, 6)]),
+                     max_new=6, seed=2)
+        eng.submit(r1)
+        eng.run_until_done()
+        assert r1.done
+        assert eng._alloc.prefix_hits == 2             # r1 reused both
+        for pid in shared:
+            np.testing.assert_array_equal(
+                np.asarray(eng.cache[seg]["k"][:, pid]), before[pid])
+
+    def test_refcount_zero_pages_recycle_under_pressure(self, gqa_cfg,
+                                                        shared_params):
+        """Indexed pages with refcount 0 stay warm for reuse but count as
+        free: a pool-filling request must be able to claim them (evicting
+        the index entries), and admission bookkeeping must stay exact."""
+        rng = np.random.default_rng(9)
+        eng = _mk(gqa_cfg, shared_params, pool=6, slots=2, max_len=48)
+        r0 = Request(0, _prompt(rng, 16), max_new=8, seed=1)
+        eng.submit(r0)
+        eng.run_until_done()
+        assert r0.done
+        assert eng.free_pages() == 6                   # cached-but-free
+        assert eng.prefix_stats()["indexed_pages"] > 0
+        big = Request(1, _prompt(rng, 40), max_new=8, seed=2)
+        assert eng.pages_needed(big) == 6              # needs the pool
+        eng.submit(big)
+        eng.run_until_done()
+        assert big.done and len(big.out) == 8
+        assert eng.free_pages() == 6
+
+
+class TestPreemption:
+    def test_priority_eviction_resumes_bitwise(self, gqa_cfg,
+                                               shared_params):
+        """A higher-priority arrival with no free pages preempts the
+        lowest-priority resident: pages recycle, the high-priority
+        request admits, and the victim resumes as a continuation whose
+        full stream is bitwise-identical to an uninterrupted run."""
+        rng = np.random.default_rng(11)
+        pa, pb = _prompt(rng, 16), _prompt(rng, 16)
+
+        eng0 = _mk(gqa_cfg, shared_params, pool=16)
+        r0 = Request(1, pa, max_new=40, seed=11)
+        eng0.submit(r0)
+        eng0.run_until_done()
+
+        eng = _mk(gqa_cfg, shared_params, pool=7)      # victim fills pool
+        ra = Request(1, pa, max_new=40, seed=11)
+        eng.submit(ra)
+        for _ in range(4):
+            eng.step()
+        assert 0 < len(ra.out) < 40
+        rb = Request(2, pb, max_new=8, seed=22, priority=5)
+        eng.submit(rb)
+        eng.step()
+        assert eng.stats["evictions"] == 1
+        assert any(q.rid == 1 for q, _ in eng.pending)  # victim re-queued
+        assert len(eng._evicted.get(1, [])) > 0         # prefix retained
+        assert any(r is not None and r.rid == 2 for r in eng.active)
+        eng.run_until_done()
+        assert ra.done and rb.done
+        assert ra.out == r0.out                        # bitwise resume
+        assert eng.free_pages() == 7
+
+    def test_held_prefix_reclaimed_when_eviction_is_not_enough(
+            self, gqa_cfg, shared_params):
+        """When freeing the victim's slot still leaves too few pages (its
+        prefix stays held for resume), preemption falls through to
+        reclaiming the held run — the high-priority request must admit,
+        and the victim still finishes bitwise via full re-prefill."""
+        rng = np.random.default_rng(12)
+        pa, pb = _prompt(rng, 16), _prompt(rng, 16)
+        eng0 = _mk(gqa_cfg, shared_params, pool=16, max_len=32)
+        r0 = Request(1, pa, max_new=16, seed=31)
+        eng0.submit(r0)
+        eng0.run_until_done()
+
+        eng = _mk(gqa_cfg, shared_params, pool=5, max_len=32)
+        ra = Request(1, pa, max_new=16, seed=31)       # 4 pages
+        eng.submit(ra)
+        for _ in range(3):
+            eng.step()
+        assert 0 < len(ra.out) < 16
+        rb = Request(2, pb, max_new=8, seed=32, priority=5)  # 3 pages
+        eng.submit(rb)
+        eng.step()
+        # evicting ra frees 1 page + holds 2-3; rb (3 fresh, different
+        # prefix) only fits once the held run is reclaimed too
+        assert eng.stats["evictions"] == 1
+        assert not eng._evicted                        # held run released
+        assert any(r is not None and r.rid == 2 for r in eng.active)
+        eng.run_until_done()
+        assert ra.done and rb.done
+        assert ra.out == r0.out
+        assert eng.free_pages() == 5
+
+    def test_equal_priority_never_preempts(self, gqa_cfg, shared_params):
+        """Preemption is strict-priority only: an equal-priority arrival
+        waits its turn (FIFO), it does not churn residents."""
+        rng = np.random.default_rng(13)
+        eng = _mk(gqa_cfg, shared_params, pool=7)
+        ra = Request(1, _prompt(rng, 16), max_new=40, seed=1)
+        eng.submit(ra)
+        for _ in range(4):
+            eng.step()
+        rb = Request(2, _prompt(rng, 16), max_new=8, seed=2)
+        eng.submit(rb)
+        eng.step()
+        assert eng.stats["evictions"] == 0
+        assert any(q.rid == 2 for q, _ in eng.pending)
+        eng.run_until_done()
+        assert ra.done and rb.done and eng.stats["evictions"] == 0
+
+    def test_page_blocked_head_lets_small_requests_skip(self, gqa_cfg,
+                                                        shared_params):
+        """Page-aware admission: a request blocked on pool pages does not
+        head-of-line-block smaller ones behind it (until the starvation
+        guard trips — bounded by STARVATION_LIMIT)."""
+        rng = np.random.default_rng(14)
+        eng = _mk(gqa_cfg, shared_params, pool=6, slots=3, max_len=48)
+        resident = Request(0, _prompt(rng, 16), max_new=16, seed=1)
+        eng.submit(resident)
+        eng.step(); eng.step(); eng.step()
+        big = Request(1, _prompt(rng, 24), max_new=8, seed=2)    # 4 pages
+        small = Request(2, _prompt(rng, 8), max_new=7, seed=3)   # 2 pages
+        eng.submit(big)
+        eng.submit(small)
+        eng.step()
+        assert any(r is not None and r.rid == 2 for r in eng.active)
+        assert any(q.rid == 1 for q, _ in eng.pending)
+        assert eng._hol_skips == 1
+        assert STARVATION_LIMIT >= 1
+        eng.run_until_done()
+        assert resident.done and big.done and small.done
+
+
+class TestPrefixAllocator:
+    """Host-side unit tests for the refcounted prefix-page allocator."""
+
+    def _keys(self, n):
+        return [bytes([i]) * 4 for i in range(n)]
+
+    def test_can_admit_is_pure(self):
+        al = paged_mod.PrefixPageAllocator(4)
+        keys = self._keys(2)
+        assert al.can_admit(keys, 3)
+        assert al.prefix_lookups == 0                  # probe, no counters
+        hits, fresh = al.admit(keys, 3)
+        assert hits == [] and len(fresh) == 3
+        assert al.prefix_lookups == 2 and al.prefix_hits == 0
+        assert not al.can_admit(self._keys(1), 2)      # only 1 page left
+
+    def test_admit_failure_mutates_nothing(self):
+        al = paged_mod.PrefixPageAllocator(2)
+        al.admit(self._keys(1), 2)
+        lk = al.prefix_lookups
+        with pytest.raises(RuntimeError, match="no free pages"):
+            al.admit(self._keys(2), 2)
+        assert al.free_pages() == 0 and al.prefix_lookups == lk
+
+    def test_register_first_writer_wins_and_release_recycles(self):
+        al = paged_mod.PrefixPageAllocator(4)
+        (a,) = al.alloc(1)
+        (b,) = al.alloc(1)
+        al.register(b"k0", a)
+        al.register(b"k0", b)                          # no-op: a owns k0
+        assert al.lookup(b"k0") == a
+        al.release([a])
+        assert al.free_pages() == 3                    # cached counts free
+        assert al.is_indexed(a)                        # ...but stays warm
+        hits, fresh = al.admit([b"k0"], 2)
+        assert hits == [a]                             # revived from cache
+        assert al.free_pages() == 1
+
+    def test_hit_run_respects_granularity(self):
+        al = paged_mod.PrefixPageAllocator(8)
+        keys = self._keys(3)
+        hits, fresh = al.admit(keys, 4)
+        for k, pid in zip(keys, fresh):
+            al.register(k, pid)
+        al.release(fresh)
+        # granularity 2 (chunk = 2 pages): a 3-page indexed run may only
+        # be claimed 2 pages at a time — the odd page re-computes
+        hits2, _ = al.admit(keys, 4, granularity=2)
+        assert len(hits2) == 2
+
+    def test_over_release_asserts(self):
+        al = paged_mod.PrefixPageAllocator(2)
+        (a,) = al.alloc(1)
+        al.release([a])
+        with pytest.raises(AssertionError):
+            al.release([a])
+
+
+class TestEvictedCancel:
+    def test_cancel_evicted_drops_continuation_and_refcounts(
+            self, gqa_cfg, shared_params):
+        """cancel() on an evicted-but-not-resumed request must remove the
+        queued continuation AND release the prefix refcounts it retained
+        — the pool returns to baseline with the preemptor still running."""
+        rng = np.random.default_rng(15)
+        eng = _mk(gqa_cfg, shared_params, pool=7)
+        ra = Request(1, _prompt(rng, 16), max_new=40, seed=1)
+        eng.submit(ra)
+        for _ in range(4):
+            eng.step()
+        rb = Request(2, _prompt(rng, 16), max_new=16, seed=2, priority=5)
+        eng.submit(rb)
+        eng.step()
+        assert eng.stats["evictions"] == 1
+        held = len(eng._evicted.get(1, []))
+        assert held > 0
+        free_before = eng.free_pages()
+        assert eng.cancel(1)
+        assert not eng._evicted
+        assert eng.free_pages() == free_before + held
+        assert not any(q.rid == 1 for q, _ in eng.pending)
+        eng.run_until_done()
+        assert rb.done and not ra.done
+        assert eng.free_pages() == 7

@@ -26,18 +26,28 @@ def gqa_cfg():
 
 def _reference_decode(model, params, cache, state, k, use_mtp=False):
     """The pre-fused host loop: one eager decode_step dispatch per token,
-    greedy argmax on host, per-slot bookkeeping in Python. Returns
+    greedy argmax on host, per-slot bookkeeping in Python. MTP follows the
+    same-step contract: draft against the module's KV ring *before* the
+    main step, verify against the token that step samples. Returns
     (per-slot token lists, drafts, accepted)."""
     from repro.core import mtp as mtp_mod
     tok = np.array(state["tokens"])
     pos = np.array(state["positions"])
     active = np.array(state["active"])
     left = np.array(state["left"])
-    draft = np.array(state["draft"])
     B = tok.shape[0]
     outs = [[] for _ in range(B)]
     drafts = accepted = 0
     for _ in range(k):
+        if use_mtp:
+            d, ring = mtp_mod.mtp_draft_tokens(
+                params, cache, model.cfg, jnp.asarray(tok),
+                jnp.asarray(pos),
+                embed_fn=lambda t: model._embed(params, t),
+                unembed_fn=lambda hh: model._unembed(params, hh))
+            d = np.asarray(d)
+            cache = dict(cache)
+            cache["mtp"] = ring
         logits, cache = model.decode_step(
             params, cache, jnp.asarray(tok[:, None]),
             jnp.asarray(pos[:, None]))
@@ -45,22 +55,15 @@ def _reference_decode(model, params, cache, state, k, use_mtp=False):
         for i in range(B):
             if not active[i]:
                 continue
-            if draft[i] >= 0:
+            if use_mtp:
                 drafts += 1
-                accepted += int(draft[i] == nxt[i])
+                accepted += int(d[i] == nxt[i])
             outs[i].append(int(nxt[i]))
             tok[i] = nxt[i]
             pos[i] += 1
             left[i] -= 1
             if left[i] <= 0:
                 active[i] = False
-        if use_mtp:
-            d = np.asarray(mtp_mod.mtp_draft_tokens(
-                params, cache, model.cfg, jnp.asarray(tok),
-                jnp.asarray(pos),
-                embed_fn=lambda t: model._embed(params, t),
-                unembed_fn=lambda hh: model._unembed(params, hh)))
-            draft = np.where(active, d, -1)
     return outs, drafts, accepted
 
 

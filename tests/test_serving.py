@@ -83,6 +83,31 @@ class TestEngine:
         assert eng.stats["drafts"] > 0
         assert 0.0 <= eng.acceptance_rate() <= 1.0
 
+    def test_mtp_acceptance_positive_with_aligned_head(self, dsv3_cfg):
+        """Regression for the dead MTP path: the draft used to be drawn
+        context-free (no KV ring), so acceptance sat at exactly 0.0 over
+        hundreds of drafts. With the draft head aligned to copy the main
+        unembedding (``mtp_align_head``), a greedy draft at step p
+        predicts the token the main model emitted at p — so on any
+        stream with consecutive repeats, acceptance MUST be positive,
+        and accepted == number of consecutive-equal emitted pairs."""
+        from repro.core.mtp import mtp_align_head
+        from repro.models.api import build_model
+        m = build_model(dsv3_cfg)
+        params = mtp_align_head(m.init(jax.random.PRNGKey(0)))
+        eng = ServeEngine(dsv3_cfg, params=params, slots=1, max_len=64,
+                          use_mtp=True, chunk=8)
+        r = Request(0, np.tile(np.array([7, 7, 7, 7], np.int32), 5),
+                    max_new=24, seed=0)
+        eng.add_request(r)
+        eng.run_until_done()
+        assert r.done and len(r.out) == 24
+        assert eng.stats["drafts"] == 23          # every decode step drafts
+        assert eng.stats["accepted_drafts"] > 0   # the headline fix
+        assert eng.acceptance_rate() > 0.0
+        pairs = sum(r.out[i] == r.out[i + 1] for i in range(len(r.out) - 1))
+        assert eng.stats["accepted_drafts"] == pairs
+
 
 class TestBoundedAdmission:
     """max_pending backpressure (ISSUE 7): a full pending queue raises a
@@ -156,6 +181,44 @@ class TestBoundedAdmission:
         assert eng.pool_stats()["pages_used"] == 0
         assert not ra.done and len(ra.out) == 1
         assert not eng.cancel(42)            # unknown rid
+
+    def test_cancel_matrix_chunked(self, dsv3_cfg):
+        """cancel() across every scheduler state of the chunked engine:
+        pending (queued, untouched pool), resident mid-chunked-prefill
+        (partial pages freed, no token delivered), and resident decoding
+        (pages freed, delivered tokens kept). The evicted state is
+        covered in test_scheduler.py::TestEvictedCancel."""
+        eng = ServeEngine(dsv3_cfg, slots=1, max_len=64, chunk=4,
+                          paged=True, page_size=8, pool_pages=8,
+                          page_storage="bf16", prefill_chunk=8)
+        decoding = Request(0, np.arange(9), max_new=24)
+        midpref = Request(1, np.arange(20), max_new=8)
+        queued = Request(2, np.arange(4), max_new=8)
+        eng.submit(decoding)
+        eng.step(); eng.step(); eng.step()
+        assert len(decoding.out) > 0 and not decoding.done
+        assert eng.cancel(0)                     # resident, decoding
+        assert eng.free_slots() == [0]
+        assert eng.pool_stats()["pages_used"] == 0
+        assert not decoding.done                 # continuation-ready
+        eng.submit(midpref)
+        eng.submit(queued)
+        eng.step()                               # admits midpref, chunk 1/3
+        assert 0 in eng._prefilling
+        assert eng.cancel(2)                     # pending
+        assert not any(q.rid == 2 for q, _ in eng.pending)
+        assert eng.cancel(1)                     # resident, mid-prefill
+        assert not eng._prefilling
+        assert eng.free_slots() == [0]
+        assert eng.pool_stats()["pages_used"] == 0
+        assert midpref.out == []                 # never sampled
+        assert not eng.cancel(1)                 # already gone
+        # the engine is clean: a fresh request runs to completion
+        r = Request(3, np.arange(5), max_new=4)
+        eng.submit(r)
+        eng.run_until_done()
+        assert r.done and len(r.out) == 4
+        assert eng.free_pages() == 8
 
     def test_disagg_bounded_handoff_queue(self, dsv3_cfg):
         dis = Disaggregator(dsv3_cfg, decode_slots=1, max_len=32,

@@ -18,9 +18,12 @@ Checks two layers:
   bytes <= 0.55x dense and >= 2x resident slots, paged-bf16 token streams
   bitwise-equal to dense, sharded decode streams equal to the
   single-device engine, ``ep_dedup`` moving strictly fewer all-to-all
-  bytes than ``ep_flat`` (serve decode *and* train step), and the
-  gateway's fault gates (crash-row retries fired, recovered streams
-  bitwise-equal to no-fault, SLO attainment retained >= 0.9x).
+  bytes than ``ep_flat`` (serve decode *and* train step), shared-prefix
+  COW saving >= 2x pool pages with streams bitwise-equal to unshared,
+  MTP acceptance strictly positive on MTP-headed rows (the dead-draft
+  regression), and the gateway's fault gates (crash-row retries fired,
+  recovered streams bitwise-equal to no-fault, SLO attainment retained
+  >= 0.9x).
 
 Stdlib-only so the CI lint job can gate on it before jax is installed.
 """
@@ -49,6 +52,13 @@ SERVE_KEYS: Dict[str, tuple] = {
         "tokens_per_s", "slots", "chunk", "max_new", "decode_tokens",
         "mesh_shape", "moe_impl", "wire", "decode_alltoall_bytes",
         "tokens_equal_single_device"),
+    "paged-bf16-shared-prefix": SERVE_COMMON + (
+        "workload", "prefill_chunk", "page_size", "pool_pages",
+        "prefix_tokens", "prefix_hits", "prefix_lookups",
+        "prefix_hit_rate", "pages_unshared_sum", "pages_shared_sum",
+        "pages_saved_vs_unshared", "tokens_equal_unshared",
+        "ttft_ms_p50_chunked", "ttft_ms_p50_whole_prompt",
+        "pool_pages_free_end"),
 }
 SERVE_KEYS["paged-fp8"] = SERVE_KEYS["paged-bf16"]
 
@@ -63,10 +73,11 @@ GATEWAY_KEYS = ("scenario", "arch", "replicas", "slots", "chunk",
                 "goodput_req_per_tick", "ttft_ticks_p50", "ttft_ticks_p99",
                 "slo_ttft_ticks", "slo_attainment", "backend")
 
-# the paper-grounded gates (see docs/serving.md §4, docs/training.md)
+# the paper-grounded gates (see docs/serving.md §4/§7, docs/training.md)
 FP8_MAX_BYTES_RATIO = 0.55     # paged-fp8 cache bytes vs dense bf16
 FP8_MIN_SLOTS_RATIO = 2.0      # paged-fp8 resident slots vs dense budget
 GATEWAY_SLO_RETENTION = 0.9    # crash-row SLO vs no-fault (serving.md §6)
+PREFIX_MIN_PAGES_SAVED = 2.0   # shared-prefix pool saving (serving.md §7)
 
 
 def _row_errors(row: dict, required: tuple, label: str) -> List[str]:
@@ -97,7 +108,22 @@ def validate_serve(doc: dict, *, require_sharded: bool = False) -> List[str]:
         if layout == "dense" and ("mtp_drafts" in row
                                   or "mtp_acceptance" in row):
             errs.extend(_row_errors(
-                row, ("mtp_drafts", "mtp_acceptance"), label + " [mtp]"))
+                row, ("mtp_drafts", "mtp_accepted", "mtp_acceptance"),
+                label + " [mtp]"))
+            if not row.get("mtp_acceptance", 0) > 0:
+                errs.append(
+                    f"{label}: mtp_acceptance must be > 0 — 0.0 over "
+                    "hundreds of drafts means the draft path is dead "
+                    "(drafting without the MTP KV ring)")
+        if layout == "paged-bf16-shared-prefix":
+            if not row.get("tokens_equal_unshared"):
+                errs.append(f"{label}: shared-prefix token streams diverge "
+                            "from unshared (COW pages must be read-only)")
+            saved = row.get("pages_saved_vs_unshared", 0)
+            if saved < PREFIX_MIN_PAGES_SAVED:
+                errs.append(
+                    f"{label}: pages_saved_vs_unshared {saved:.2f} below "
+                    f"{PREFIX_MIN_PAGES_SAVED}x (prefix COW gate)")
         by[(row.get("arch"), layout)] = row
         if row.get("tokens_per_s", 1) <= 0:
             errs.append(f"{label}: tokens_per_s must be > 0")
