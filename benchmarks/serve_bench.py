@@ -296,6 +296,121 @@ def bench_prefix_sharing(arch: str = "qwen3-14b", *, requests: int = 8,
     }
 
 
+TIER_POOL_PAGES = 16         # device pool: exactly 2 full slots of KV
+TIER_HOST_PAGES = 48         # host tier: 3x the device pool (§4.5 hop)
+TIER_QUANTUM = 4             # decode ticks before a rotation is eligible
+
+
+def bench_kv_tier(arch: str = "qwen3-14b", *, requests: int = 14,
+                  max_new: int = 32, max_len: int = 64, chunk: int = 4,
+                  slots: int = 2, prefill_chunk: int = 8) -> dict:
+    """Host KV-tier workload row (ISSUE 9): ``requests`` requests, ~3.4x
+    more resident context than the device pool holds, complete without an
+    admission failure because refcount-0 / quantum-expired pages spill to
+    the host tier and are prefetched back before the decode window needs
+    them. Reports resident-context tokens vs the device-only pool, the
+    no-stall prefetch gate, bitwise stream parity vs the untiered engine,
+    and chaos parity under ``pcie_slow`` / ``pcie_drop`` (transfer
+    retry/backoff + continuation re-queue must not change any stream)."""
+    import jax
+    from repro.serve.engine import ServeEngine
+    from repro.serve.fault import ServeFaultInjector, TierFaultAdapter
+    from repro.serve.tier import TierConfig
+
+    cfg = _smoke_cfg(arch)
+
+    def mkreq(rid):
+        r = _mkreq(rid, cfg, max_new)
+        r.seed = rid              # seeded so a degrade re-queue is bitwise
+        return r
+
+    def run_stream(eng):
+        reqs = [mkreq(rid) for rid in range(requests)]
+        for r in reqs:
+            eng.submit(r)
+        tic = time.perf_counter()
+        eng.run_until_done()
+        wall = time.perf_counter() - tic
+        assert all(r.done for r in reqs)
+        return [r.out for r in reqs], wall
+
+    # untiered reference: same pool, no host tier — the PR 8 scheduler
+    # completes the stream by evict-and-requeue; its streams are the
+    # bitwise bar the tiered engine must meet
+    base = ServeEngine(cfg, slots=slots, max_len=max_len, chunk=chunk,
+                       paged=True, page_size=PAGE_SIZE,
+                       pool_pages=TIER_POOL_PAGES, page_storage="bf16",
+                       prefill_chunk=prefill_chunk)
+    stream_untiered, _ = run_stream(base)
+
+    def tiered_engine(faults=None):
+        return ServeEngine(cfg, params=base.params, slots=slots,
+                           max_len=max_len, chunk=chunk, paged=True,
+                           page_size=PAGE_SIZE, pool_pages=TIER_POOL_PAGES,
+                           page_storage="bf16", prefill_chunk=prefill_chunk,
+                           host_tier_pages=TIER_HOST_PAGES,
+                           tier_config=TierConfig(quantum=TIER_QUANTUM),
+                           tier_faults=faults)
+
+    eng = tiered_engine()
+    stream, wall = run_stream(eng)
+    ts = eng.tier_stats()
+
+    # chaos runs: same workload with the tier link degraded mid-decode
+    # (self-clocked adapter: the engine advances the injector per step)
+    def chaos(kind):
+        inj = ServeFaultInjector(schedule={6: kind})
+        ceng = tiered_engine(TierFaultAdapter(inj, replica=0))
+        s, _ = run_stream(ceng)
+        return s, ceng.tier_stats()
+
+    stream_slow, ts_slow = chaos("pcie_slow")
+    stream_drop, ts_drop = chaos("pcie_drop")
+
+    resident_tokens = ts["peak_resident_pages"] * PAGE_SIZE
+    device_only_tokens = TIER_POOL_PAGES * PAGE_SIZE
+    decode_tokens = int(sum(len(o) for o in stream))
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "attention": cfg.attention,
+        "cache_layout": "paged-bf16-kv-tier",
+        "workload": "kv-tier",
+        "slots": slots,
+        "chunk": chunk,
+        "prefill_chunk": prefill_chunk,
+        "requests": requests,
+        "max_new": max_new,
+        "page_size": PAGE_SIZE,
+        "pool_pages": TIER_POOL_PAGES,
+        "host_tier_pages": TIER_HOST_PAGES,
+        "tier_quantum": TIER_QUANTUM,
+        "decode_tokens": decode_tokens,
+        "tokens_per_s": decode_tokens / wall if wall else 0.0,
+        "suspensions": ts["suspensions"],
+        "resumes": ts["resumes"],
+        "spilled_pages": ts["spilled_pages"],
+        "fetched_pages": ts["fetched_pages"],
+        "spill_bytes": ts["spill_bytes"],
+        "fetch_bytes": ts["fetch_bytes"],
+        "prefix_spilled": ts["prefix_spilled"],
+        "prefetch_stalls": ts["prefetch_stalls"],
+        "degraded": ts["degraded"],
+        "tier_full_refusals": ts["tier_full_refusals"],
+        "peak_resident_pages": ts["peak_resident_pages"],
+        "resident_tokens": resident_tokens,
+        "device_only_tokens": device_only_tokens,
+        "resident_tokens_vs_device_only":
+            resident_tokens / device_only_tokens,
+        "tiered_streams_equal": stream == stream_untiered,
+        "streams_equal_pcie_slow": stream_slow == stream,
+        "streams_equal_pcie_drop": stream_drop == stream,
+        "pcie_drop_retries": ts_drop["retries"],
+        "pcie_slow_suspensions": ts_slow["suspensions"],
+        "backend": jax.default_backend(),
+    }
+
+
 def bench_paged(arch: str, storage: str, dense_row: dict,
                 dense_stream: list, *, slots: int = 2, max_len: int = 64,
                 chunk: int = 8, requests: int = 6, max_new: int = 17,
@@ -508,6 +623,16 @@ def check(rows: list) -> None:
                 "shared-prefix streams != whole-prompt prefill"
             assert r["pages_saved_vs_unshared"] >= 2.0, \
                 r["pages_saved_vs_unshared"]
+        if r.get("workload") == "kv-tier":
+            assert r["tiered_streams_equal"], \
+                "kv-tier streams != untiered engine"
+            assert r["resident_tokens_vs_device_only"] >= 3.0, \
+                r["resident_tokens_vs_device_only"]
+            assert r["prefetch_stalls"] == 0, r["prefetch_stalls"]
+            assert r["streams_equal_pcie_slow"], \
+                "kv-tier streams changed under pcie_slow"
+            assert r["streams_equal_pcie_drop"], \
+                "kv-tier streams changed under pcie_drop"
     sharded = {r["moe_impl"]: r for r in rows
                if r["cache_layout"] == "dense-sharded"}
     if sharded:
@@ -525,6 +650,7 @@ def run(out: str | None = None, chunk: int = 8,
     for arch, kw in CONFIGS:
         rows.extend(bench_all(arch, chunk=chunk, **kw))
     rows.append(bench_prefix_sharing(chunk=chunk))
+    rows.append(bench_kv_tier())
     if sharded:
         rows.extend(sharded_rows_subprocess())
     check(rows)
@@ -548,6 +674,11 @@ def suite():
                    f"hit_rate={r['prefix_hit_rate']:.2f} "
                    f"pages_saved=x{r['pages_saved_vs_unshared']:.1f} "
                    f"ttft_p50_ms={r['ttft_ms_p50_chunked']:.1f}")
+        elif r.get("workload") == "kv-tier":
+            yield (f"serve_kv_tier_{r['arch']}", us,
+                   f"resident=x{r['resident_tokens_vs_device_only']:.2f} "
+                   f"stalls={r['prefetch_stalls']} "
+                   f"spill_B={r['spill_bytes']}")
         elif r["cache_layout"] == "dense":
             yield (f"serve_decode_{r['arch']}", us,
                    f"tok/s={r['tokens_per_s']:.1f} "
@@ -582,6 +713,17 @@ def main():
                   f"{r['tokens_per_s']:.1f} tok/s, decode a2a "
                   f"{r['decode_alltoall_bytes']} B/step, streams==single: "
                   f"{r['tokens_equal_single_device']}")
+        elif r.get("workload") == "kv-tier":
+            print(f"[serve_bench] {r['arch']} kv-tier: "
+                  f"x{r['resident_tokens_vs_device_only']:.2f} resident "
+                  f"tokens vs device-only "
+                  f"({r['resident_tokens']}/{r['device_only_tokens']}), "
+                  f"{r['suspensions']} spills / {r['resumes']} resumes, "
+                  f"{r['prefetch_stalls']} stalls, streams==untiered: "
+                  f"{r['tiered_streams_equal']}, chaos equal: "
+                  f"slow={r['streams_equal_pcie_slow']} "
+                  f"drop={r['streams_equal_pcie_drop']} "
+                  f"({r['pcie_drop_retries']} retries)")
         elif r.get("workload") == "shared-prefix":
             print(f"[serve_bench] {r['arch']} shared-prefix: "
                   f"hit rate {r['prefix_hit_rate']:.2f}, "

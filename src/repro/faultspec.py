@@ -15,10 +15,13 @@ from typing import FrozenSet, Optional
 
 # Kinds each harness accepts. Train faults address the whole job ("node",
 # "net", "sdc") or a DP replica ("slow:<r>"); serve faults always address
-# one replica of the gateway's pool.
+# one replica of the gateway's pool. The ``pcie_*``/``tier_full`` kinds
+# target a replica's KV-tier transfer path (ISSUE 9): a degraded PCIe
+# link (slow), a lossy one (drop), and an exhausted host page tier.
 TRAIN_KINDS: FrozenSet[str] = frozenset({"node", "net", "sdc", "slow"})
 SERVE_KINDS: FrozenSet[str] = frozenset(
-    {"crash", "hang", "slow", "flaky-admit"})
+    {"crash", "hang", "slow", "flaky-admit",
+     "pcie_slow", "pcie_drop", "tier_full"})
 
 
 @dataclasses.dataclass(frozen=True)

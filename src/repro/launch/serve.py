@@ -78,13 +78,21 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None)
     ap.add_argument("--page-storage", default="fp8",
                     choices=("fp8", "bf16"))
+    ap.add_argument("--host-tier-pages", type=int, default=None,
+                    metavar="N",
+                    help="paged only: host-memory KV tier of N pages "
+                         "behind the device pool (docs/serving.md §8) — "
+                         "suspended requests and cold prefix pages spill "
+                         "over the staged PCIe hop and prefetch back")
     ap.add_argument("--gateway", type=int, default=0, metavar="N",
                     help="serve through N engine replicas behind the "
                          "fault-tolerant gateway (docs/serving.md §6)")
     ap.add_argument("--chaos", default=None, metavar="T=KIND[:R],..",
                     help="gateway only: inject faults on the tick clock, "
                          "e.g. '6=crash:0,9=slow:1' (kinds: crash, hang, "
-                         "slow, flaky-admit)")
+                         "slow, flaky-admit, pcie_slow, pcie_drop, "
+                         "tier_full — the tier kinds need "
+                         "--host-tier-pages)")
     ap.add_argument("--max-retries", type=int, default=2,
                     help="gateway only: re-dispatch budget per request")
     ap.add_argument("--mesh", default=None, metavar="D,M",
@@ -103,6 +111,13 @@ def main():
     paged_kw = dict(paged=args.paged, page_size=args.page_size,
                     pool_pages=args.pool_pages,
                     page_storage=args.page_storage)
+    if args.host_tier_pages is not None:
+        if not args.paged:
+            raise SystemExit("--host-tier-pages requires --paged")
+        if args.disagg:
+            raise SystemExit("--host-tier-pages does not apply to the "
+                             "--disagg decode pool yet")
+        paged_kw["host_tier_pages"] = args.host_tier_pages
     ctx = _make_ctx(args.mesh, args.moe_impl, args.wire)
     if args.prefill_mesh and not args.disagg:
         raise SystemExit("--prefill-mesh only applies with --disagg")
@@ -149,6 +164,14 @@ def main():
         print(f"[serve] replica health: {gw.registry.states()}")
         if injector is not None and injector.events:
             print(f"[serve] chaos fired: {injector.events}")
+        if args.host_tier_pages is not None:
+            for rep in gw.registry.replicas.values():
+                ts = rep.engine.tier_stats()
+                print(f"[serve] replica {rep.rid} tier: suspensions "
+                      f"{ts['suspensions']}, resumes {ts['resumes']}, "
+                      f"stalls {ts['prefetch_stalls']}, degraded "
+                      f"{ts['degraded']}, retries {ts['retries']}, "
+                      f"host occupancy {ts['host_occupancy']:.2f}")
         for g in grs[:3]:
             print(f"  req {g.gid}: prompt {list(g.prompt[:6])}... -> "
                   f"{g.delivered[:args.max_new]} [{g.state}]")
@@ -217,6 +240,15 @@ def main():
               f"{eng.cache_bytes_per_token():.0f} B/token, "
               f"pool {eng.pool_stats()}, "
               f"peak pages {eng.stats['peak_pages_used']}")
+    if args.host_tier_pages is not None:
+        ts = eng.tier_stats()
+        print(f"[serve] host tier ({args.host_tier_pages} pages): "
+              f"suspensions {ts['suspensions']}, resumes {ts['resumes']}, "
+              f"spilled {ts['spilled_pages']}p/{ts['spill_bytes']}B, "
+              f"fetched {ts['fetched_pages']}p/{ts['fetch_bytes']}B, "
+              f"stalls {ts['prefetch_stalls']}, degraded {ts['degraded']}, "
+              f"peak resident {ts['peak_resident_pages']}p "
+              f"(device pool {eng.pool_pages}p)")
     if args.mtp and not eng.use_mtp:
         print(f"[serve] --mtp ignored: {cfg.name} has no MTP module")
     elif args.mtp:

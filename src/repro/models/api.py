@@ -1047,11 +1047,12 @@ class Model:
                if k in cache1}
         return {"pages": pages, "aux": aux}
 
-    def admit_pages(self, cache, payload_pages, ids, table_row, slot):
-        """Scatter a request's quantized prefill pages into the pools and
-        install its page-table row (jit-friendly; ``slot`` traced).
-        ``ids``: (bucket_pages,) physical page ids (trash-padded beyond
-        the reserved range); ``table_row``: (pages_per_slot,) int32."""
+    def install_pages(self, cache, payload_pages, ids):
+        """Scatter page payload into the pools at physical ``ids`` — no
+        page-table change (jit-friendly). The shared core of prefill
+        admission and the KV tier's fetch path: trash-padded ``ids``
+        entries land in the scratch page, so one static payload width
+        serves every transfer size."""
         from repro.core import paged as paged_mod
 
         def seg_scatter(pool, pages):
@@ -1066,6 +1067,33 @@ class Model:
                                  for k in ("dense", "moe")}
             else:
                 out[seg.name] = seg_scatter(cache[seg.name], sub)
+        return out
+
+    def gather_pages(self, cache, ids):
+        """Read physical pages ``ids`` out of every pool — the inverse of
+        :meth:`install_pages`, shaped ``(layers, len(ids), page, ...)``
+        per leaf (jit-friendly; ``ids`` may be a traced int32 vector).
+        This is the device side of a tier spill: the caller stages the
+        result to host memory between ticks."""
+        def seg_gather(pool):
+            return {k: pool[k][:, ids] for k in pool}
+
+        out = {}
+        for seg in self.segments:
+            sub = cache[seg.name]
+            if seg.kind == "dense_moe":
+                out[seg.name] = {k: seg_gather(sub[k])
+                                 for k in ("dense", "moe")}
+            else:
+                out[seg.name] = seg_gather(sub)
+        return out
+
+    def admit_pages(self, cache, payload_pages, ids, table_row, slot):
+        """Scatter a request's quantized prefill pages into the pools and
+        install its page-table row (jit-friendly; ``slot`` traced).
+        ``ids``: (bucket_pages,) physical page ids (trash-padded beyond
+        the reserved range); ``table_row``: (pages_per_slot,) int32."""
+        out = self.install_pages(cache, payload_pages, ids)
         table = cache["page_table"]
         out["page_table"] = jax.lax.dynamic_update_slice(
             table, table_row[None].astype(table.dtype), (slot, 0))

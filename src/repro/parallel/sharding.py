@@ -299,6 +299,39 @@ def paged_cache_pspecs(cache_structs, mesh: Mesh, dp_axes: Tuple[str, ...],
     return out
 
 
+def tier_payload_pspecs(payload_structs, mesh: Mesh,
+                        model_axis: str = "model"):
+    """Shardings for a KV-tier page payload (``Model.gather_pages``
+    output: ``(layers, k, page, ...)`` per pool leaf).
+
+    A payload leaf keeps its pool leaf's trailing axes — only the pool's
+    ``P+1`` physical-page axis is swapped for the gathered ``k`` axis — so
+    ``core/paged.pool_model_axes`` applies verbatim: GQA K/V payloads can
+    stay sharded over their KV-head axis while staged, everything else
+    replicates. Note the *tier itself* holds no device state: entry
+    metadata, residency states, CRCs, and the host page store are plain
+    host-side Python/numpy (no pspecs to declare) — only the in-flight
+    gather/install payloads touched by the engine's tier jits are device
+    arrays, and these are their specs.
+    """
+    from repro.core import paged as paged_mod
+    msize = mesh.shape[model_axis]
+
+    def one(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+        entries: list = [None] * leaf.ndim
+        ax = paged_mod.pool_model_axes(name, leaf.ndim)
+        if ax is not None and leaf.shape[ax] % msize == 0 and \
+                leaf.shape[ax] >= msize:
+            entries[ax] = model_axis
+        return NamedSharding(mesh, P(*entries))
+
+    paths = jax.tree_util.tree_flatten_with_path(payload_structs)[0]
+    treedef = jax.tree.structure(payload_structs)
+    return jax.tree.unflatten(treedef, [one(p, l) for p, l in paths])
+
+
 # per-slot decode-state leaves with a leading batch (slot) axis; the
 # chunk counters replicate. Name-driven because scalar counters would
 # otherwise be ambiguous against 1-d slot vectors.

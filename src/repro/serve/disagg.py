@@ -25,7 +25,8 @@ EP32 vs decode EP320 are *different-sized* device groups): pass
 separate ``prefill_ctx`` the pools become two engines over two meshes
 sharing one parameter set (each sharded per its own mesh's serving
 rules), and the handoff payload is staged through **host memory**
-(``jax.device_get``) between them — the explicit PCIe/DMA hop whose
+(``serve/tier.staged_get``, the audited crossing point shared with the
+KV page tier) between them — the explicit PCIe/DMA hop whose
 contention §4.5 flags; ``handoff_bytes`` is exactly what crosses it. The
 payload is mesh-shape-agnostic (a batch-1 cache pytree or a quantized
 page payload, no device axes), which is what lets a prefill mesh of one
@@ -42,6 +43,7 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.parallel import context as pctx_mod
+from repro.serve import tier as tier_mod
 from repro.serve.engine import AdmissionError, Request, ServeEngine
 
 
@@ -140,10 +142,9 @@ class Disaggregator:
             # host arrays (the PCIe/DMA transfer of §4.5) and is
             # re-committed to the decode mesh at admission. The payload
             # carries no device axes, so prefill mesh size != decode
-            # mesh size is fine by construction.
-            # repro-lint: disable=R1-host-sync -- the documented §4.5
-            # PCIe hop: one staged host copy per handoff, by design
-            cache1 = jax.device_get(cache1)
+            # mesh size is fine by construction. Same audited crossing
+            # point the KV tier uses (serve/tier.py).
+            cache1 = tier_mod.staged_get(cache1)
         self.queue.append(Handoff(req, cache1, first, cache_nbytes(cache1)))
 
     def admit(self):

@@ -62,6 +62,7 @@ from repro.configs.base import ModelConfig
 from repro.core import paged as paged_mod
 from repro.models.api import Model, build_model
 from repro.parallel import context as pctx_mod
+from repro.serve import tier as tier_mod
 
 # Smallest prefill bucket: prompts shorter than this share one compile.
 MIN_BUCKET = 8
@@ -144,6 +145,20 @@ def _splice(batch_cache, one_cache, slot, axes):
     return jax.tree.map(f, batch_cache, one_cache, axes)
 
 
+def _slot_slice(batch_cache, slot, axes):
+    """Read slot ``slot`` out of a batch cache as a batch-1 pytree — the
+    inverse of :func:`_splice` for full-length leaves (``slot`` traced).
+    Used by the tier's suspension gather to capture a slot's aux leaves
+    (encoder memory, MTP state) alongside its pages."""
+    def f(big, ax):
+        starts = tuple(slot if i == ax else 0 for i in range(big.ndim))
+        sizes = tuple(1 if i == ax else big.shape[i]
+                      for i in range(big.ndim))
+        return jax.lax.dynamic_slice(big, starts, sizes)
+
+    return jax.tree.map(f, batch_cache, axes)
+
+
 class ServeEngine:
     """Fixed-slot batch engine (continuous batching-lite).
 
@@ -164,6 +179,9 @@ class ServeEngine:
                  page_storage: str = "fp8",
                  max_pending: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 host_tier_pages: Optional[int] = None,
+                 tier_config: Optional[tier_mod.TierConfig] = None,
+                 tier_faults=None,
                  ctx: Optional[pctx_mod.ParallelCtx] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -214,6 +232,38 @@ class ServeEngine:
             self._aux_axes = self.model.paged_aux_axes()
         else:
             self.cache = self.model.init_cache(slots, max_len)
+        # host-memory KV page tier (ROADMAP 4): the device pool becomes a
+        # cache over `host_tier_pages` of host capacity — suspended slots
+        # spill whole page sets, warm refcount-0 prefix pages spill ahead
+        # of reuse, and everything rides the staged §4.5 host hop on the
+        # tick-clocked transfer model in serve/tier.py
+        self.tier: Optional[paged_mod.HostPageTier] = None
+        if host_tier_pages is not None:
+            if not paged:
+                raise ValueError("host_tier_pages requires paged=True: the "
+                                 "tier spills page sets, dense rings have "
+                                 "none")
+            self.tier = paged_mod.HostPageTier(host_tier_pages)
+        elif tier_faults is not None:
+            raise ValueError("tier_faults without host_tier_pages: there "
+                             "is no tier transfer path to inject into")
+        self.tier_cfg = (tier_config if tier_config is not None
+                         else tier_mod.TierConfig())
+        self.tier_faults = (tier_faults if tier_faults is not None
+                            else tier_mod.NullFaultHook())
+        self._xfers = tier_mod.TransferClock(self.tier_cfg)
+        # rid -> suspension entry; insertion order is the resume order
+        self._suspended: "collections.OrderedDict[int, Dict[str, Any]]" = \
+            collections.OrderedDict()
+        self._spilling_slots: Dict[int, int] = {}   # slot -> rid
+        self._slot_tick0 = np.zeros((slots,), np.int64)
+        self._tick = 0
+        self.tstats = {"suspensions": 0, "resumes": 0, "spilled_pages": 0,
+                       "fetched_pages": 0, "spill_bytes": 0,
+                       "fetch_bytes": 0, "prefetch_stalls": 0,
+                       "degraded": 0, "crc_failures": 0, "spill_aborts": 0,
+                       "tier_full_refusals": 0, "peak_resident_pages": 0,
+                       "prefix_spilled": 0, "prefix_fetched": 0}
         self._cache_shardings = None
         self._state_shardings = None
         self._tok_sharding = None
@@ -258,6 +308,9 @@ class ServeEngine:
         self._release_traces = 0
         self._chunk_traces = 0
         self._table_traces = 0
+        self._tier_gather_traces = 0
+        self._tier_scatter_traces = 0
+        self._tier_resume_traces = 0
         donate = jax.default_backend() != "cpu"
         # meshed engines pin the cache/state out-shardings to the input
         # shardings: without the pin, GSPMD could hand back a re-sharded
@@ -323,6 +376,66 @@ class ServeEngine:
                 self._table_fn = jax.jit(
                     table_install, donate_argnums=(0,) if donate else (),
                     out_shardings=cache_out)
+
+            if self.tier is not None:
+                # the three tier entry points, each compile-once: gather
+                # reads a fixed pages_per_slot-wide id vector (trash-padded)
+                # plus the slot's aux leaves; scatter installs a payload of
+                # the same static width (no page-table change — FETCHING
+                # pages hold bytes before any row references them); resume
+                # installs the table row + aux splice when a slot frees up
+                def tier_gather(cache, ids, slot):
+                    self._tier_gather_traces += 1
+                    pages = self.model.gather_pages(cache, ids)
+                    aux = {}
+                    if self._aux_axes:
+                        aux = _slot_slice(
+                            {k: cache[k] for k in self._aux_axes}, slot,
+                            self._aux_axes)
+                    return pages, aux
+
+                gather_out = None
+                if self.meshed:
+                    from jax.sharding import NamedSharding, PartitionSpec
+                    from repro.parallel import sharding as sh_mod
+                    zids = np.zeros((self.pages_per_slot,), np.int32)
+                    pay_s, aux_s = jax.eval_shape(tier_gather, self.cache,
+                                                  zids, 0)
+                    self._tier_gather_traces = 0   # eval_shape traced once
+                    rep = NamedSharding(self.ctx.mesh, PartitionSpec())
+                    gather_out = (
+                        sh_mod.tier_payload_pspecs(
+                            pay_s, self.ctx.mesh,
+                            self.ctx.tp_axis or "model"),
+                        jax.tree.map(lambda _: rep, aux_s))
+                # repro-lint: disable=R2-jit-contract -- the cache is
+                # only read, never donated: the suspended slot's gather
+                # must keep decoding peers' pool buffer alive
+                self._tier_gather_fn = jax.jit(tier_gather,
+                                               out_shardings=gather_out)
+
+                def tier_scatter(cache, pages, ids):
+                    self._tier_scatter_traces += 1
+                    return self.model.install_pages(cache, pages, ids)
+
+                self._tier_scatter_fn = jax.jit(
+                    tier_scatter, donate_argnums=(0,) if donate else (),
+                    out_shardings=cache_out)
+
+                def tier_resume(cache, aux, row, slot):
+                    self._tier_resume_traces += 1
+                    table = cache["page_table"]
+                    out = dict(cache)
+                    out["page_table"] = jax.lax.dynamic_update_slice(
+                        table, row[None].astype(table.dtype), (slot, 0))
+                    if aux:
+                        big = {k: out[k] for k in aux}
+                        out.update(_splice(big, aux, slot, self._aux_axes))
+                    return out
+
+                self._tier_resume_fn = jax.jit(
+                    tier_resume, donate_argnums=(0,) if donate else (),
+                    out_shardings=cache_out)
         else:
             axes = self.model.cache_batch_axes(slots, max_len)
 
@@ -375,6 +488,8 @@ class ServeEngine:
                                      ep_ftp=getattr(ctx, "ep_ftp", False))
         self._param_shardings = sharding.param_shardings(
             mesh, self.model.specs(), rules)
+        # repro-lint: disable=R1-host-sync -- one-time mesh install at
+        # engine construction, not a decode-loop transfer
         self.params = jax.device_put(self.params, self._param_shardings)
         model_axis = ctx.tp_axis or "model"
         if self.paged:
@@ -383,6 +498,8 @@ class ServeEngine:
         else:
             self._cache_shardings = sharding.cache_pspecs(
                 self.cache, mesh, ctx.dp_axes, model_axis)
+        # repro-lint: disable=R1-host-sync -- one-time mesh install at
+        # engine construction, not a decode-loop transfer
         self.cache = jax.device_put(self.cache, self._cache_shardings)
         self._state_shardings = sharding.decode_state_shardings(
             mesh, self.slots, ctx.dp_axes)
@@ -412,7 +529,12 @@ class ServeEngine:
                 "scatter": self._scatter_traces,
                 "release": self._release_traces,
                 "chunk": self._chunk_traces,
-                "table": self._table_traces}
+                "table": self._table_traces,
+                # tier engines: gather/scatter/resume each ≤ 1 — every
+                # transfer pads to the static pages_per_slot width
+                "tier_gather": self._tier_gather_traces,
+                "tier_scatter": self._tier_scatter_traces,
+                "tier_resume": self._tier_resume_traces}
 
     def decode_lowered_text(self) -> str:
         """StableHLO text of the fused decode chunk at this engine's
@@ -660,6 +782,7 @@ class ServeEngine:
                                        # stream index offset
         self._slot_extras[slot] = extras
         self.active[slot] = req
+        self._slot_tick0[slot] = self._tick
 
     # -- scheduler ----------------------------------------------------------
     def _admit_now(self, req: Request, extras: Optional[Dict]):
@@ -724,6 +847,39 @@ class ServeEngine:
                                       prompt=prompt, max_new=max_new,
                                       offset=offset, row=row)
         self.active[slot] = req
+        self._slot_tick0[slot] = self._tick
+        if self.tier is not None:
+            self._probe_tier_prefix(slot, hits, fresh, keys, L, skip)
+
+    def _probe_tier_prefix(self, slot: int, hits: List[int],
+                           fresh: List[int], keys: List[bytes], L: int,
+                           skip: int):
+        """Extend a chunked admission's shared-prefix run with host-tier
+        prefix pages: pages past the device hit run that the tier holds
+        are fetched into the slot's fresh pages instead of recomputed.
+        The prefill cursor only advances when the fetch lands CRC-clean
+        (``_finish_prefix_fetch``); until then the slot waits — decode
+        never reads a page before its bytes are installed."""
+        p, C = self.page_size, self.prefill_chunk
+        ppc = C // p
+        h = len(hits)
+        if skip != h * p:
+            return   # device hits already reach the final-chunk bound
+        bound_pages = ((L - 1) // C * C) // p
+        run = min(self.tier.prefix_run(keys[h:], ppc),
+                  bound_pages - h) // ppc * ppc
+        if run <= 0:
+            return
+        tkeys = keys[h:h + run]
+        stored = self.tier.take_prefix(tkeys)
+        ps = self._prefilling[slot]
+        ps["tier_xfer"] = True
+        self._xfers.submit(
+            tier_mod.PREFIX_FETCH, ps["req"].rid, None,
+            sum(paged_mod.payload_nbytes(pg) for pg, _ in stored),
+            slow=self.tier_faults.slow(), slot=slot, req=ps["req"],
+            keys=tkeys, stored=stored, pages=fresh[:run],
+            end=(h + run) * p)
 
     def _run_prefill_chunk(self, slot: int):
         """Advance one prefilling slot by one chunk; the final chunk
@@ -781,6 +937,7 @@ class ServeEngine:
         self._eos[slot] = -1 if req.eos is None else req.eos
         self._rngs[slot] = np.asarray(base, np.uint32)
         self._tix[slot] = ps["offset"] + 1
+        self._slot_tick0[slot] = self._tick   # quantum clock: decode start
 
     def _pick_admission(self) -> Optional[int]:
         """Index of the pending entry to admit next: highest priority
@@ -803,17 +960,42 @@ class ServeEngine:
     def _try_evict(self, inc: int) -> bool:
         """Free capacity for an incoming priority-``inc`` request: evict
         the lowest-priority resident whose priority is strictly lower,
-        or — when no resident qualifies — reclaim the retained prefix
-        pages of a strictly-lower-priority evicted continuation (it will
+        or — when no resident qualifies — abort the fetch of a
+        strictly-lower-priority suspended entry (its host copy survives;
+        the fetch restarts later), or reclaim the retained prefix pages
+        of a strictly-lower-priority evicted continuation (it will
         re-prefill; its token stream stays bitwise-identical either way).
-        Returns False when nothing can be preempted."""
+        Tiered engines prefer *spilling* the victim over evicting it —
+        its KV moves to the host instead of being recomputed — in which
+        case this returns False: the capacity arrives asynchronously when
+        the spill lands, and the caller must not keep preempting for the
+        same arrival this tick."""
         victims = [(self.active[s].priority, s) for s in range(self.slots)
                    if self.active[s] is not None
                    and s not in self._prefilling
+                   and s not in self._spilling_slots
                    and self.active[s].priority < inc]
         if victims:
-            self._evict_slot(min(victims)[1])
+            slot = min(victims)[1]
+            if self.tier is not None and self._begin_suspend(slot):
+                return False
+            self._evict_slot(slot)
             return True
+        if self.tier is not None:
+            fetching = [(e["req"].priority, rid)
+                        for rid, e in self._suspended.items()
+                        if e["state"] == "fetching"
+                        and e["req"].priority < inc]
+            if fetching:
+                rid = min(fetching)[1]
+                e = self._suspended[rid]
+                self._xfers.cancel(lambda t: t.rid == rid
+                                   and t.kind == tier_mod.FETCH)
+                self.tier.abort_fetch(e["eid"])
+                self._alloc.release(e["fetch_pages"])
+                e["fetch_pages"], e["tier_entry"] = None, None
+                e["state"] = "host"
+                return True
         held = [(req.priority, i) for i, (req, _) in
                 enumerate(self.pending)
                 if req.priority < inc and req.rid in self._evicted]
@@ -855,13 +1037,15 @@ class ServeEngine:
         self._release_slot(slot)
         self.pending.appendleft((req, extras))
 
-    def _admit_pending(self):
+    def _admit_pending(self) -> int:
+        admitted = 0
         while self.pending:
             i = self._pick_admission()
             if i is not None:
                 req, extras = self.pending[i]
                 del self.pending[i]
                 self._admit_now(req, extras)
+                admitted += 1
                 continue
             # Everything admissible is in; preempt for the
             # highest-priority blocked entry. Capacity freed here is
@@ -884,6 +1068,351 @@ class ServeEngine:
             req, extras = self.pending[head_i]
             del self.pending[head_i]
             self._admit_now(req, extras)
+            admitted += 1
+        return admitted
+
+    # -- host page tier (ISSUE 9 / §4.5 memory hierarchy) --------------------
+    def _begin_suspend(self, slot: int) -> bool:
+        """Start spilling ``slot``'s whole page set to the host tier.
+
+        The gather + staged copy happen eagerly (the slot's masked decode
+        lane would otherwise keep mutating aux state, and a reused slot
+        would overwrite it), the page-table row is trashed immediately so
+        no later dispatch can write into the captured pages, and the
+        *transfer clock* models when the host copy becomes durable — the
+        slot and its device pages stay held until the spill lands, so a
+        failed spill resumes in place with zero lost work. Returns False
+        when the tier cannot take the pages (caller falls back to the
+        PR 8 evict-and-requeue rung)."""
+        req = self.active[slot]
+        pages = self._slot_pages[slot]
+        n = len(pages)
+        if n == 0:
+            return False
+        if self.tier_faults.full():
+            self.tstats["tier_full_refusals"] += 1
+            return False
+        eid = self.tier.reserve(n)
+        if eid is None:
+            self.tstats["tier_full_refusals"] += 1
+            return False
+        trash = self.pool_pages
+        ids = np.asarray(pages + [trash] * (self.pages_per_slot - n),
+                         np.int32)
+        self.stats["dispatches"] += 1
+        pay_dev, aux_dev = self._tier_gather_fn(self.cache,
+                                                jnp.asarray(ids), slot)
+        payload = tier_mod.trim_pages(tier_mod.staged_get(pay_dev), n)
+        aux = tier_mod.staged_get(aux_dev)
+        crcs = paged_mod.payload_page_crcs(payload, n)
+        aux_crc = paged_mod.payload_crc(aux)
+        nbytes = (paged_mod.payload_nbytes(payload)
+                  + paged_mod.payload_nbytes(aux))
+        # trash the row now: the captured bytes must stay immutable while
+        # the transfer is in flight (the lane is masked out of decode, but
+        # masked lanes still write through their row)
+        self.stats["dispatches"] += 1
+        self.cache = self._release_fn(self.cache, slot)
+        mirrors = dict(pos=int(self.positions[slot]),
+                       tok=int(self._tokens[slot]),
+                       left=int(self._left[slot]),
+                       eos=int(self._eos[slot]),
+                       rng=self._rngs[slot].copy(),
+                       tix=int(self._tix[slot]))
+        self._xfers.submit(tier_mod.SPILL, req.rid, eid, nbytes,
+                           slow=self.tier_faults.slow())
+        self._suspended[req.rid] = dict(
+            req=req, extras=self._slot_extras[slot], state="spilling",
+            eid=eid, n=n, slot=slot, pages=None, fetch_pages=None,
+            tier_entry=None, payload=payload, aux=aux, crcs=crcs,
+            aux_crc=aux_crc, mirrors=mirrors)
+        self._spilling_slots[slot] = req.rid
+        self.tstats["suspensions"] += 1
+        return True
+
+    def _finish_spill(self, t: tier_mod.TierTransfer):
+        """A spill landed: the host copy is durable, so the device side —
+        slot and pages — finally frees (the row was trashed at suspend)."""
+        e = self._suspended.get(t.rid)
+        if e is None or e["state"] != "spilling":
+            return   # cancelled while in flight
+        self.tier.commit(e["eid"], e["payload"], e["aux"], e["crcs"],
+                         e["aux_crc"])
+        slot = e.pop("slot")
+        del self._spilling_slots[slot]
+        self._alloc.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.stats["page_releases"] += 1
+        self.active[slot] = None
+        self._slot_extras[slot] = None
+        e["state"] = "host"
+        e["payload"] = None   # the tier owns the bytes now
+        self.tstats["spilled_pages"] += e["n"]
+        self.tstats["spill_bytes"] += t.nbytes
+
+    def _fail_spill(self, t: tier_mod.TierTransfer):
+        """Spill transfer failed terminally: resume in place. The device
+        pages were never released, so re-installing the row + aux loses
+        nothing — the degradation ladder's cheapest rung."""
+        e = self._suspended.pop(t.rid, None)
+        if e is None:
+            return
+        self.tier.free(e["eid"])
+        slot = e["slot"]
+        del self._spilling_slots[slot]
+        self.tstats["spill_aborts"] += 1
+        pages = self._slot_pages[slot]
+        trash = self.pool_pages
+        row = np.full((self.pages_per_slot,), trash, np.int32)
+        row[:len(pages)] = pages
+        self.stats["dispatches"] += 1
+        self.cache = self._tier_resume_fn(self.cache, e["aux"],
+                                          jnp.asarray(row), slot)
+        self._restore_mirrors(slot, e["mirrors"])
+        self._slot_tick0[slot] = self._tick
+
+    def _restore_mirrors(self, slot: int, m: Dict[str, Any]):
+        self.positions[slot] = m["pos"]
+        self._tokens[slot] = m["tok"]
+        self._left[slot] = m["left"]
+        self._eos[slot] = m["eos"]
+        self._rngs[slot] = m["rng"]
+        self._tix[slot] = m["tix"]
+
+    def _start_fetches(self):
+        """Prefetch-ahead: start host->device transfers for suspended
+        entries, FIFO (oldest suspension first), using whatever pool pages
+        admission left over this tick. A page-blocked entry blocks the
+        ones behind it (no small-latecomer jumping — that is the
+        admission queue's starvation lesson applied here), and when the
+        pending head's starvation guard has tripped, freed pages are its
+        alone, so no fetch starts at all."""
+        if self.tier is None:
+            return
+        if self.pending and self._hol_skips >= STARVATION_LIMIT:
+            return
+        for rid, e in self._suspended.items():
+            if e["state"] != "host":
+                continue
+            n = e["n"]
+            if n > self.free_pages():
+                break
+            e["fetch_pages"] = self._alloc.alloc(n)
+            ent = self.tier.begin_fetch(e["eid"])
+            e["tier_entry"] = ent
+            e["state"] = "fetching"
+            nbytes = (paged_mod.payload_nbytes(ent.payload)
+                      + paged_mod.payload_nbytes(ent.aux))
+            self._xfers.submit(tier_mod.FETCH, rid, e["eid"], nbytes,
+                               slow=self.tier_faults.slow())
+
+    def _finish_fetch(self, t: tier_mod.TierTransfer):
+        """A fetch landed: CRC-check the host bytes, scatter them into the
+        reserved device pages, and mark the entry ready to resume the
+        moment a slot frees. CRC mismatch walks the degradation ladder."""
+        e = self._suspended.get(t.rid)
+        if e is None or e["state"] != "fetching":
+            return
+        ent, n = e["tier_entry"], e["n"]
+        if (paged_mod.payload_page_crcs(ent.payload, n) != ent.crcs
+                or paged_mod.payload_crc(ent.aux) != ent.aux_crc):
+            self.tstats["crc_failures"] += 1
+            self._degrade(t.rid)
+            return
+        pages = e["fetch_pages"]
+        trash = self.pool_pages
+        ids = np.asarray(pages + [trash] * (self.pages_per_slot - n),
+                         np.int32)
+        payload = tier_mod.pad_pages(ent.payload, self.pages_per_slot)
+        self.stats["dispatches"] += 1
+        self.cache = self._tier_scatter_fn(
+            self.cache, tier_mod.staged_put(payload), jnp.asarray(ids))
+        e["aux"] = ent.aux
+        e["pages"], e["fetch_pages"] = pages, None
+        e["tier_entry"] = None
+        e["state"] = "ready"
+        self.tier.free(e["eid"])
+        self.tstats["fetched_pages"] += n
+        self.tstats["fetch_bytes"] += t.nbytes
+
+    def _degrade(self, rid: int):
+        """Unrecoverable fetch (retries exhausted / timeout / CRC): drop
+        the tiered copy and re-queue the request as a PR 7-style
+        continuation — ``_effective`` re-prefills prompt+delivered at the
+        advanced stream offset, so a seeded request's completed stream
+        stays bitwise-identical to the no-fault run."""
+        e = self._suspended.pop(rid, None)
+        if e is None:
+            return
+        if e["fetch_pages"]:
+            self._alloc.release(e["fetch_pages"])
+        self.tier.free(e["eid"])
+        self.tstats["degraded"] += 1
+        self.pending.appendleft((e["req"], e["extras"]))
+
+    def _resume_ready(self) -> int:
+        """Re-admit fetched entries (suspension order) into free slots:
+        one jitted row+aux install each, host mirrors restored — no
+        prefill, no recompute. Runs after admissions so new requests get
+        first claim on slots (least-attained-service first)."""
+        resumed = 0
+        for rid in list(self._suspended):
+            e = self._suspended[rid]
+            if e["state"] != "ready":
+                continue
+            free = self.free_slots()
+            if not free:
+                break
+            slot = free[0]
+            pages = e["pages"]
+            trash = self.pool_pages
+            row = np.full((self.pages_per_slot,), trash, np.int32)
+            row[:len(pages)] = pages
+            self.stats["dispatches"] += 1
+            self.cache = self._tier_resume_fn(self.cache, e["aux"],
+                                              jnp.asarray(row), slot)
+            del self._suspended[rid]
+            self._slot_pages[slot] = pages
+            self._slot_extras[slot] = e["extras"]
+            self.active[slot] = e["req"]
+            self._restore_mirrors(slot, e["mirrors"])
+            self._slot_tick0[slot] = self._tick
+            self.tstats["resumes"] += 1
+            resumed += 1
+        return resumed
+
+    def _rotate(self):
+        """Time-slice rotation: when waiters exist (queued requests or
+        suspended entries), suspend the longest-resident decoding slot
+        whose quantum expired — spill-based preemption, so oversubscribed
+        workloads round-robin through the device pool instead of
+        re-prefilling (PR 8's evict) or starving the queue."""
+        waiters = [req.priority for req, _ in self.pending]
+        waiters += [e["req"].priority for e in self._suspended.values()
+                    if e["state"] != "spilling"]
+        if not waiters:
+            return
+        cap = max(waiters)
+        decoding = [s for s in range(self.slots)
+                    if self.active[s] is not None
+                    and s not in self._prefilling
+                    and s not in self._spilling_slots]
+        ready = any(e["state"] == "ready"
+                    for e in self._suspended.values())
+        if len(decoding) <= 1 and not ready:
+            return   # never idle the whole pool waiting on the PCIe link
+        expired = [(self._slot_tick0[s], s) for s in decoding
+                   if self._tick - self._slot_tick0[s] >= self.tier_cfg.quantum
+                   and self.active[s].priority <= cap]
+        if expired:
+            self._begin_suspend(min(expired)[1])
+
+    def _harvest_prefix(self):
+        """Warm-LRU prefix spill: when the plain free pool runs dry and
+        refcount-0 prefix pages are parked in the device cache, move the
+        coldest batch to the host tier's prefix store — they come back via
+        the admission-time tier probe instead of recompute. Pages stay
+        pinned until the host copy is durable; a failed spill re-indexes
+        them (nothing lost either way — these are cache copies)."""
+        if self.prefill_chunk is None or self.tier_faults.full():
+            return
+        if self._alloc.plain_free() > 0 or self._alloc.cached_free() == 0:
+            return
+        k = min(self.tier_cfg.harvest_batch, self.pages_per_slot,
+                self.tier.free_pages())
+        harvested = self._alloc.harvest(k)
+        if not harvested:
+            return
+        trash = self.pool_pages
+        ids = np.asarray([pid for pid, _ in harvested]
+                         + [trash] * (self.pages_per_slot - len(harvested)),
+                         np.int32)
+        self.stats["dispatches"] += 1
+        pay_dev, _ = self._tier_gather_fn(self.cache, jnp.asarray(ids), 0)
+        payload = tier_mod.trim_pages(tier_mod.staged_get(pay_dev),
+                                      len(harvested))
+        self._xfers.submit(tier_mod.PREFIX_SPILL, None, None,
+                           paged_mod.payload_nbytes(payload),
+                           slow=self.tier_faults.slow(),
+                           harvest=harvested, payload=payload)
+
+    def _finish_prefix_spill(self, t: tier_mod.TierTransfer):
+        for j, (pid, key) in enumerate(t.meta["harvest"]):
+            pg = tier_mod.slice_page(t.meta["payload"], j)
+            self.tier.put_prefix(key, pg, paged_mod.payload_crc(pg))
+        self._alloc.release([pid for pid, _ in t.meta["harvest"]])
+        self.tstats["prefix_spilled"] += len(t.meta["harvest"])
+        self.tstats["spill_bytes"] += t.nbytes
+
+    def _fail_prefix_spill(self, t: tier_mod.TierTransfer):
+        # the device copy never left: re-index the pages (release parks
+        # them back in the warm cache) and count the abort
+        for pid, key in t.meta["harvest"]:
+            self._alloc.register(key, pid)
+        self._alloc.release([pid for pid, _ in t.meta["harvest"]])
+        self.tstats["spill_aborts"] += 1
+
+    def _finish_prefix_fetch(self, t: tier_mod.TierTransfer):
+        """Tier prefix pages arrived for a chunk-prefilling slot: verify
+        CRCs, scatter into the slot's already-reserved fresh pages,
+        index them, and advance the prefill cursor past the covered
+        chunks. Any CRC mismatch drops the poisoned tier entries and
+        leaves the cursor alone — the chunks recompute into the same
+        pages, bitwise-identical."""
+        m = t.meta
+        slot = m["slot"]
+        ps = self._prefilling.get(slot)
+        if ps is None or ps.get("req") is not m["req"]:
+            return   # slot cancelled/recycled while the fetch flew
+        ps["tier_xfer"] = False
+        bad = [j for j, (pg, crc) in enumerate(m["stored"])
+               if paged_mod.payload_crc(pg) != crc]
+        if bad:
+            self.tstats["crc_failures"] += 1
+            for j in bad:
+                self.tier.drop_prefix(m["keys"][j])
+            return
+        trash = self.pool_pages
+        pages = m["pages"]
+        ids = np.asarray(pages + [trash] * (self.pages_per_slot
+                                            - len(pages)), np.int32)
+        payload = tier_mod.pad_pages(
+            tier_mod.concat_pages([pg for pg, _ in m["stored"]]),
+            self.pages_per_slot)
+        self.stats["dispatches"] += 1
+        self.cache = self._tier_scatter_fn(
+            self.cache, tier_mod.staged_put(payload), jnp.asarray(ids))
+        for j, key in enumerate(m["keys"]):
+            self._alloc.register(key, pages[j])
+        ps["next"] = m["end"]
+        self.tstats["prefix_fetched"] += len(pages)
+        self.tstats["fetch_bytes"] += t.nbytes
+
+    def _fail_prefix_fetch(self, t: tier_mod.TierTransfer):
+        ps = self._prefilling.get(t.meta["slot"])
+        if ps is not None and ps.get("req") is t.meta["req"]:
+            ps["tier_xfer"] = False   # cursor untouched: chunks recompute
+
+    def _advance_transfers(self):
+        done, failed = self._xfers.advance(self.tier_faults)
+        for t in done:
+            if t.kind == tier_mod.SPILL:
+                self._finish_spill(t)
+            elif t.kind == tier_mod.FETCH:
+                self._finish_fetch(t)
+            elif t.kind == tier_mod.PREFIX_SPILL:
+                self._finish_prefix_spill(t)
+            elif t.kind == tier_mod.PREFIX_FETCH:
+                self._finish_prefix_fetch(t)
+        for t in failed:
+            if t.kind == tier_mod.SPILL:
+                self._fail_spill(t)
+            elif t.kind == tier_mod.FETCH:
+                self._degrade(t.rid)
+            elif t.kind == tier_mod.PREFIX_SPILL:
+                self._fail_prefix_spill(t)
+            elif t.kind == tier_mod.PREFIX_FETCH:
+                self._fail_prefix_fetch(t)
 
     # -- decode -------------------------------------------------------------
     def _device_state(self) -> Dict[str, Any]:
@@ -894,10 +1423,12 @@ class ServeEngine:
         st = dict(
             tokens=jnp.asarray(self._tokens),
             positions=jnp.asarray(self.positions),
-            # slots mid-chunked-prefill are occupied but not yet decoding:
-            # masked out of the fused loop until their prompt completes
+            # slots mid-chunked-prefill are occupied but not yet decoding,
+            # and mid-spill slots hold captured-in-flight pages: both are
+            # masked out of the fused loop
             active=jnp.asarray(np.array(
                 [r is not None and i not in self._prefilling
+                 and i not in self._spilling_slots
                  for i, r in enumerate(self.active)])),
             left=jnp.asarray(self._left),
             eos=jnp.asarray(self._eos),
@@ -907,7 +1438,8 @@ class ServeEngine:
             accepted=jnp.zeros((), jnp.int32),
         )
         if self.meshed:
-            # commit the freshly-built host mirrors onto their mesh
+            # repro-lint: disable=R1-host-sync -- per-chunk dispatch
+            # point: tiny per-slot scalars committed onto their mesh
             # shardings so every dispatch sees identical input shardings
             st = jax.device_put(st, self._state_shardings)
         return st
@@ -917,14 +1449,49 @@ class ServeEngine:
         order, page-aware, preempting lower-priority residents when a
         higher-priority arrival is blocked), advance one chunked-prefill
         slot by one chunk, then run one fused ``chunk``-step decode
-        dispatch over the decoding slots."""
-        self._admit_pending()
+        dispatch over the decoding slots.
+
+        Tiered engines prepend the tier phases: advance the transfer
+        clock (landing spills frees slots/pages, landing fetches readies
+        resumes), admit, resume fetched entries into leftover slots,
+        rotate a quantum-expired resident out for waiters, start
+        prefetches with leftover pages, and harvest cold prefix pages —
+        then decode as usual with spilling slots masked out. Fetches are
+        restarted once more after decode so pages freed by completions
+        this tick are already in flight by the next."""
+        if self.tier is not None:
+            self._tick += 1
+            self.tier_faults.on_tick()
+            self._advance_transfers()
+            admitted = self._admit_pending()
+            resumed = self._resume_ready()
+            if (not admitted and not resumed and self.free_slots()
+                    and any(e["state"] in ("host", "fetching")
+                            for e in self._suspended.values())):
+                # a slot sat idle this tick because tiered KV wasn't back
+                # yet — the prefetch schedule exists to keep this at 0
+                self.tstats["prefetch_stalls"] += 1
+            self._rotate()
+            self._start_fetches()
+            self._harvest_prefix()
+            live = sum(len(p) for p in self._slot_pages) + sum(
+                e["n"] for e in self._suspended.values()
+                if e["state"] != "spilling")
+            self.tstats["peak_resident_pages"] = max(
+                self.tstats["peak_resident_pages"], live)
+        else:
+            self._admit_pending()
         if self._prefilling:
             # one chunk for one long-prompt admission per tick, so
             # resident decode streams keep flowing between chunks (no
-            # TTFT cliff for requests queued behind a long prompt)
-            self._run_prefill_chunk(min(self._prefilling))
+            # TTFT cliff for requests queued behind a long prompt);
+            # slots whose prefix pages are inbound from the tier wait
+            runnable = [s for s in self._prefilling
+                        if not self._prefilling[s].get("tier_xfer")]
+            if runnable:
+                self._run_prefill_chunk(min(runnable))
         if not any(r is not None and i not in self._prefilling
+                   and i not in self._spilling_slots
                    for i, r in enumerate(self.active)):
             return
         self.stats["dispatches"] += 1
@@ -942,9 +1509,10 @@ class ServeEngine:
         self.stats["drafts"] += int(host["drafts"])
         self.stats["accepted_drafts"] += int(host["accepted"])
         # copy: device_get arrays are read-only, mirrors are written on
-        # admit. Prefilling slots keep their host-written mirrors — their
-        # masked decode lanes carry stale device state
-        keep = np.array([i in self._prefilling
+        # admit. Prefilling and mid-spill slots keep their host-written
+        # mirrors — their masked decode lanes carry stale device state
+        # (a spilling slot's authoritative mirrors ride its tier entry)
+        keep = np.array([i in self._prefilling or i in self._spilling_slots
                          for i in range(self.slots)])
         self._tokens = np.where(keep, self._tokens,
                                 host["tokens"]).astype(np.int32)
@@ -963,6 +1531,12 @@ class ServeEngine:
             if not host["active"][i]:
                 r.done = True
                 self._release_slot(i)
+        if self.tier is not None:
+            # pages freed by completions this tick feed the prefetch
+            # schedule immediately: the fetch lands on next tick's clock
+            # advance, before the freed slot is rescheduled — the no-stall
+            # overlap the serve_bench gate asserts
+            self._start_fetches()
 
     def _release_slot(self, slot: int):
         """Free ``slot``: clear occupancy and (paged) drop one reference
@@ -982,10 +1556,13 @@ class ServeEngine:
     def cancel(self, rid: int) -> bool:
         """Abort a request by id: drop it from the pending queue (an
         evicted-but-not-resumed continuation also releases the prefix
-        refcounts it retained), or free its slot — mid-chunked-prefill or
+        refcounts it retained), free its slot — mid-chunked-prefill or
         decoding alike (pages recycled; the lane is masked out of the
-        next dispatch). The Request object is left as-is — ``done`` stays
-        False, ``out`` keeps whatever was delivered — so a gateway can
+        next dispatch) — or, on tiered engines, unwind whichever tier
+        state it is in (SPILLING/HOST/FETCHING/ready): device and host
+        pages both free and any in-flight transfer is dropped from the
+        clock. The Request object is left as-is — ``done`` stays False,
+        ``out`` keeps whatever was delivered — so a gateway can
         re-dispatch it as a continuation. Returns False if unknown."""
         for i, (req, _) in enumerate(self.pending):
             if req.rid == rid:
@@ -994,24 +1571,75 @@ class ServeEngine:
                 if held:
                     self._alloc.release(held)
                 return True
+        e = self._suspended.pop(rid, None)
+        if e is not None:
+            self._xfers.cancel(lambda t: t.rid == rid)
+            st = e["state"]
+            if st == "spilling":
+                # slot + device pages still held; row already trashed
+                slot = e["slot"]
+                del self._spilling_slots[slot]
+                self.tier.free(e["eid"])
+                self._release_slot(slot)
+            elif st == "host":
+                self.tier.free(e["eid"])
+            elif st == "fetching":
+                self.tier.free(e["eid"])
+                if e["fetch_pages"]:
+                    self._alloc.release(e["fetch_pages"])
+            else:   # ready: tier entry already freed, device pages held
+                self._alloc.release(e["pages"])
+            return True
         for slot, req in enumerate(self.active):
             if req is not None and req.rid == rid:
                 self._prefilling.pop(slot, None)
+                if self.tier is not None:
+                    self._xfers.cancel(lambda t: t.rid == rid)
                 self._release_slot(slot)
                 return True
         return False
 
     def pool_stats(self) -> Dict[str, Any]:
-        """Page-pool occupancy (zeros for dense engines)."""
+        """Page-pool occupancy (zeros for dense engines). Tiered engines
+        add the host side so capacity dashboards see both levels of the
+        hierarchy."""
         if not self.paged:
             return dict(pages_total=0, pages_free=0, pages_used=0,
                         occupancy=0.0)
         free = self.free_pages()
         used = self.pool_pages - free
-        return dict(pages_total=self.pool_pages,
-                    pages_free=free, pages_used=used,
-                    occupancy=used / self.pool_pages if self.pool_pages
-                    else 0.0)
+        out = dict(pages_total=self.pool_pages,
+                   pages_free=free, pages_used=used,
+                   occupancy=used / self.pool_pages if self.pool_pages
+                   else 0.0)
+        if self.tier is not None:
+            out.update(host_pages_total=self.tier.capacity_pages,
+                       host_pages_free=self.tier.free_pages(),
+                       host_occupancy=self.tier.occupancy())
+        return out
+
+    def tier_stats(self) -> Dict[str, Any]:
+        """Host-tier residency and transfer counters (``tstats`` plus the
+        live tier/clock occupancy). Meaningful only on tiered engines;
+        returns the zeroed counters otherwise so callers can read it
+        unconditionally."""
+        out = dict(self.tstats)
+        if self.tier is None:
+            out.update(host_pages_total=0, host_pages_used=0,
+                       host_pages_free=0, host_occupancy=0.0,
+                       host_prefix_pages=0, suspended=0,
+                       transfers_inflight=0, retries=0, timeouts=0)
+            return out
+        out.update(host_pages_total=self.tier.capacity_pages,
+                   host_pages_used=self.tier.used_pages(),
+                   host_pages_free=self.tier.free_pages(),
+                   host_occupancy=self.tier.occupancy(),
+                   host_prefix_pages=self.tier.prefix_pages(),
+                   suspended=len(self._suspended),
+                   transfers_inflight=len(self._xfers.inflight),
+                   retries=self._xfers.retries,
+                   timeouts=self._xfers.timeouts)
+        return out
 
     def prefix_stats(self) -> Dict[str, Any]:
         """Prefix-index effectiveness (zeros for dense / non-chunked
@@ -1021,9 +1649,14 @@ class ServeEngine:
         if not self.paged:
             return dict(lookups=0, hits=0, hit_rate=0.0, indexed_pages=0)
         lk = self._alloc.prefix_lookups
-        return dict(lookups=lk, hits=self._alloc.prefix_hits,
-                    hit_rate=self._alloc.prefix_hits / lk if lk else 0.0,
-                    indexed_pages=self._alloc.indexed_pages())
+        out = dict(lookups=lk, hits=self._alloc.prefix_hits,
+                   hit_rate=self._alloc.prefix_hits / lk if lk else 0.0,
+                   indexed_pages=self._alloc.indexed_pages())
+        if self.tier is not None:
+            out.update(tier_prefix_pages=self.tier.prefix_pages(),
+                       tier_prefix_evictions=self.tier.prefix_evictions,
+                       tier_prefix_fetched=self.tstats["prefix_fetched"])
+        return out
 
     def cache_bytes_per_token(self) -> float:
         """Attention-cache bytes per token of context capacity — the
@@ -1044,12 +1677,23 @@ class ServeEngine:
                     for leaf in jax.tree.leaves(self.cache[seg.name]))
         return total / (self.slots * self.max_len)
 
+    def has_work(self) -> bool:
+        """Whether another ``step()`` can make progress: queued or
+        resident requests, suspended entries parked in the host tier, or
+        transfers still on the clock. Drivers (``run_until_done``, the
+        gateway's idle check) must use this rather than pending/active
+        alone — a tiered engine with every request suspended looks idle
+        by the old test but still owes those requests their resumes."""
+        return (bool(self.pending)
+                or any(r is not None for r in self.active)
+                or bool(self._suspended)
+                or bool(self._xfers.inflight))
+
     def run_until_done(self, max_steps: int = 1000):
         """Drive chunks until every submitted/admitted request completes.
         ``max_steps`` bounds the number of fused chunks."""
         for _ in range(max_steps):
-            if not self.pending and not any(
-                    r is not None for r in self.active):
+            if not self.has_work():
                 break
             self.step()
 

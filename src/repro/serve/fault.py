@@ -20,10 +20,21 @@ shared ``repro/faultspec.py`` grammar (``kind[:replica]``):
   ``AdmissionError``) for ``flaky_ticks`` ticks — consecutive failures
   that must trip the circuit breaker, then succeed on a half-open probe
   once the flakiness passes.
+* ``pcie_slow:<r>``   — the replica's KV-tier transfer link degrades:
+  spill/fetch ETAs are stretched by ``pcie_slow_factor`` for
+  ``pcie_ticks`` ticks (the §4.5 PCIe contention scenario).
+* ``pcie_drop:<r>``   — the link goes lossy: transfer completion attempts
+  fail for ``pcie_ticks`` ticks, exercising the bounded retry/backoff and
+  timeout-escalation path.
+* ``tier_full``       — the host page tier reports no capacity for
+  ``pcie_ticks`` ticks: spills are refused and preemption falls back to
+  the PR 8 evict-and-requeue ladder rung.
 
 The injector is pure bookkeeping — the *gateway* consults it at each
 interaction point (heartbeat, admit, step) and fails accordingly, so the
-failure surfaces exactly where a real fault would: in the caller.
+failure surfaces exactly where a real fault would: in the caller. Tier
+faults reach a replica's engine through :class:`TierFaultAdapter`, the
+engine-facing hook ``serve/tier.py``'s transfer clock consults.
 """
 from __future__ import annotations
 
@@ -52,6 +63,9 @@ class ServeFaultInjector:
     slow_factor: float = 10.0
     slow_ticks: int = 8          # how long a slow:<r> straggler persists
     flaky_ticks: int = 4         # how long flaky-admit:<r> rejects
+    pcie_slow_factor: float = 4.0  # ETA stretch while pcie_slow is active
+    pcie_ticks: int = 6          # window of pcie_slow / pcie_drop /
+                                 # tier_full faults
 
     def __post_init__(self):
         for tick, spec in self.schedule.items():
@@ -63,6 +77,9 @@ class ServeFaultInjector:
         self._hung: Set[int] = set()
         self._slow_until: Dict[int, int] = {}
         self._flaky_until: Dict[int, int] = {}
+        self._pcie_slow_until: Dict[int, int] = {}
+        self._pcie_drop_until: Dict[int, int] = {}
+        self._tier_full_until: Dict[int, int] = {}
         self._fired: Set[int] = set()
         self.events = []          # [(tick, spec)] — what actually fired
 
@@ -83,6 +100,12 @@ class ServeFaultInjector:
             self._slow_until[r] = tick + self.slow_ticks
         elif fs.kind == "flaky-admit":
             self._flaky_until[r] = tick + self.flaky_ticks
+        elif fs.kind == "pcie_slow":
+            self._pcie_slow_until[r] = tick + self.pcie_ticks
+        elif fs.kind == "pcie_drop":
+            self._pcie_drop_until[r] = tick + self.pcie_ticks
+        elif fs.kind == "tier_full":
+            self._tier_full_until[r] = tick + self.pcie_ticks
         self.events.append((tick, str(fs)))
         return fs
 
@@ -118,3 +141,54 @@ class ServeFaultInjector:
         Crashes are permanent by design — a dead engine re-registers as a
         new replica instead."""
         self._hung.discard(replica)
+
+    # -- tier-transfer predicates (consulted via TierFaultAdapter) --------
+    def pcie_slow_multiplier(self, replica: int, tick: int) -> float:
+        """Transfer-ETA stretch for ``replica``'s tier link at ``tick``."""
+        return (self.pcie_slow_factor
+                if tick < self._pcie_slow_until.get(replica, -1) else 1.0)
+
+    def pcie_drops(self, replica: int, tick: int) -> bool:
+        """Whether a transfer completion attempt at ``tick`` is dropped."""
+        return tick < self._pcie_drop_until.get(replica, -1)
+
+    def tier_full(self, replica: int, tick: int) -> bool:
+        """Whether the host tier refuses reservations at ``tick``."""
+        return tick < self._tier_full_until.get(replica, -1)
+
+
+class TierFaultAdapter:
+    """Engine-facing view of one replica's tier-fault state.
+
+    ``ServeEngine`` and the transfer clock query faults with no-argument
+    predicates (they know nothing about replicas or the gateway clock);
+    this adapter binds an injector to a replica id and a clock. Standalone
+    engines (no gateway) pass ``clock=None`` and the adapter keeps its own
+    tick counter, advanced by the engine calling :meth:`on_tick` at the
+    top of each ``step()`` — ``ServeFaultInjector.advance`` is idempotent
+    per tick, so gateway-driven and engine-driven advancement compose.
+    """
+
+    def __init__(self, injector: ServeFaultInjector, replica: int = 0,
+                 clock=None):
+        self.injector = injector
+        self.replica = replica
+        self._clock = clock
+        self._tick = -1
+
+    def _now(self) -> int:
+        return self._clock() if self._clock is not None else self._tick
+
+    def on_tick(self) -> None:
+        if self._clock is None:
+            self._tick += 1
+            self.injector.advance(self._tick)
+
+    def drop(self) -> bool:
+        return self.injector.pcie_drops(self.replica, self._now())
+
+    def slow(self) -> float:
+        return self.injector.pcie_slow_multiplier(self.replica, self._now())
+
+    def full(self) -> bool:
+        return self.injector.tier_full(self.replica, self._now())

@@ -38,9 +38,11 @@ engines:
   finishes residents while refusing new admits.
 
 Faults are injected by ``serve/fault.py`` (``crash:<r>``, ``hang:<r>``,
-``slow:<r>``, ``flaky-admit:<r>``) on the same tick clock, so every
-path above is exercised deterministically by tests and
-``benchmarks/gateway_bench.py``.
+``slow:<r>``, ``flaky-admit:<r>``, and the KV-tier kinds
+``pcie_slow:<r>`` / ``pcie_drop:<r>`` / ``tier_full``, which reach each
+replica's engine through a clock-shared ``TierFaultAdapter``) on the
+same tick clock, so every path above is exercised deterministically by
+tests and ``benchmarks/gateway_bench.py``.
 
 The gateway is tick-driven: ``tick()`` advances the virtual clock one
 scheduling round (heartbeats → deadlines → shed → route → step →
@@ -58,7 +60,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serve.engine import AdmissionError, Request, ServeEngine
-from repro.serve.fault import ReplicaCrash, ServeFaultInjector
+from repro.serve.fault import (ReplicaCrash, ServeFaultInjector,
+                               TierFaultAdapter)
 
 # Health states (registry) and circuit states (router), as plain strings
 # so they serialize straight into stats/bench rows.
@@ -130,6 +133,12 @@ class Replica:
     free_pages: int = 0
     prefix_hit_rate: float = 0.0
     indexed_pages: int = 0
+    # host KV tier (ISSUE 9): how full the replica's second memory level
+    # is and how many requests are parked there — capacity planning sees
+    # the whole hierarchy, not just HBM
+    host_occupancy: float = 0.0
+    host_free_pages: int = 0
+    tier_suspended: int = 0
 
     def report(self):
         """Refresh the load report (called on each heartbeat)."""
@@ -146,6 +155,15 @@ class Replica:
         else:
             self.occupancy = slot_occ
             self.free_pages = 0
+        if eng.tier is not None:
+            ts = eng.tier_stats()
+            self.host_occupancy = ts["host_occupancy"]
+            self.host_free_pages = ts["host_pages_free"]
+            self.tier_suspended = ts["suspended"]
+            # tier-suspended requests are the replica's to finish: count
+            # them as load so the router doesn't pile new work onto a
+            # replica whose pool is already time-slicing
+            self.load += ts["suspended"]
 
 
 class ReplicaRegistry:
@@ -299,6 +317,8 @@ class Gateway:
                  pool_pages: Optional[int] = None,
                  page_storage: str = "fp8",
                  prefill_chunk: Optional[int] = None,
+                 host_tier_pages: Optional[int] = None,
+                 tier_config=None,
                  max_pending: int = 64,
                  engine_max_pending: Optional[int] = 8,
                  suspect_after: int = 2, dead_after: int = 4,
@@ -332,6 +352,13 @@ class Gateway:
                       "failed": 0, "replica_deaths": 0, "ticks": 0,
                       "dispatches": 0, "affinity_hits": 0}
         for i in range(replicas):
+            # tier faults ride the gateway clock: each replica's engine
+            # consults its own adapter, so ``pcie_slow:<r>`` degrades one
+            # replica's link while its peers transfer at full speed
+            tf = None
+            if injector is not None and host_tier_pages is not None:
+                tf = TierFaultAdapter(injector, replica=i,
+                                      clock=lambda: self.clock)
             eng = ServeEngine(cfg, params=params, slots=slots,
                               max_len=max_len, seed=seed + i, chunk=chunk,
                               temperature=temperature, top_k=top_k,
@@ -339,6 +366,9 @@ class Gateway:
                               pool_pages=pool_pages,
                               page_storage=page_storage,
                               prefill_chunk=prefill_chunk,
+                              host_tier_pages=host_tier_pages,
+                              tier_config=tier_config,
+                              tier_faults=tf,
                               max_pending=engine_max_pending)
             if params is None:
                 params = eng.params       # one parameter set, N replicas
@@ -586,8 +616,10 @@ class Gateway:
             except ReplicaCrash:
                 self._kill(rep)
                 return False
-        if not rep.engine.pending and all(
-                r is None for r in rep.engine.active):
+        # has_work, not pending/active: a tiered engine whose requests
+        # are all suspended in the host tier looks idle by the old test
+        # but still owes them fetches and resumes
+        if not rep.engine.has_work():
             return False
         rep.engine.step()
         return True

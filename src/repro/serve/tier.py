@@ -1,0 +1,201 @@
+"""Device<->host staging + transfer clock for the KV page tier.
+
+The host tier (``core/paged.HostPageTier``) turns the device page pool
+into a cache: suspended slots and cold prefix pages park in host memory
+and come back on demand. Every byte that crosses the boundary rides the
+same explicit host hop the §4.5 PCIe disagg handoff uses — a staged
+``device_get``/``device_put`` *between* engine ticks, never inside a
+jitted trace. The two staged helpers below are the **only** sanctioned
+crossing points (repro-lint R1-host-sync enforces this for the tier:
+a raw ``jax.device_get``/``jax.device_put`` anywhere else in this module
+is a lint error), so transfer volume stays auditable: every call site is
+either one of these helpers or carries a reviewed waiver.
+
+Transfers are modeled on the engine's tick clock by :class:`TransferClock`:
+each in-flight :class:`TierTransfer` counts down an ETA (stretched by an
+injected ``pcie_slow`` factor), a completion attempt can be failed by
+``pcie_drop`` (bounded retry with exponential backoff), and a transfer
+that outlives ``timeout_ticks`` escalates to a hard failure — the engine's
+degradation ladder (resume-in-place for spills, continuation re-queue for
+fetches) takes over from there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def staged_get(tree: Any) -> Any:
+    """Stage a device pytree to host numpy — the §4.5 PCIe/DMA hop.
+
+    Called between ticks with already-computed arrays (a gathered page
+    payload), so the sync is the transfer itself, not a hidden stall of
+    the decode dispatch pipeline.
+    """
+    # repro-lint: disable=R1-host-sync -- the staged-transfer helper: the
+    # documented tier/disagg host hop, one audited crossing point
+    return jax.device_get(tree)
+
+
+def staged_put(tree: Any) -> Any:
+    """Stage a host pytree onto the default device(s).
+
+    The inverse hop: fetched page bytes re-enter device memory here and
+    only here; the jitted scatter that installs them into the pool takes
+    these arrays as ordinary operands.
+    """
+    # repro-lint: disable=R1-host-sync -- the staged-transfer helper: the
+    # documented tier/disagg host hop, one audited crossing point
+    return jax.device_put(tree)
+
+
+@dataclasses.dataclass
+class TierConfig:
+    """Knobs for the tier's transfer model and scheduler policy."""
+    xfer_ticks: int = 1        # base ticks per device<->host transfer
+    max_retries: int = 3       # completion attempts after the first
+    timeout_ticks: int = 32    # hard escalation: transfer age limit
+    quantum: int = 8           # decode ticks a resident runs before it can
+                               # be rotated out for a waiter
+    harvest_batch: int = 4     # warm-LRU prefix pages spilled per sweep
+
+
+class NullFaultHook:
+    """Fault hook that never fires (the no-chaos default)."""
+
+    def on_tick(self) -> None:
+        pass
+
+    def drop(self) -> bool:
+        return False
+
+    def slow(self) -> float:
+        return 1.0
+
+    def full(self) -> bool:
+        return False
+
+
+# transfer kinds
+SPILL = "spill"              # suspended slot: device -> host
+FETCH = "fetch"              # suspended slot: host -> device
+PREFIX_SPILL = "prefix-spill"  # harvested warm prefix pages -> host
+PREFIX_FETCH = "prefix-fetch"  # tier prefix hit -> fresh device pages
+
+
+@dataclasses.dataclass
+class TierTransfer:
+    """One in-flight device<->host page transfer on the tick clock."""
+    kind: str
+    rid: Optional[str]             # owning request (None for prefix spills)
+    eid: Optional[int]             # HostPageTier entry id (slot transfers)
+    nbytes: int
+    eta: int                       # ticks until the current attempt lands
+    meta: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0
+    backoff: int = 0
+    age: int = 0
+    failure: Optional[str] = None  # set when the clock gives up
+
+
+class TransferClock:
+    """Advances in-flight transfers once per engine tick.
+
+    ``advance(hook)`` returns ``(completed, failed)``: transfers whose
+    attempt landed this tick, and transfers that exhausted their retry
+    budget or outlived the timeout. The caller finalizes completions
+    (the actual staged copy / pool scatter) and walks failures down the
+    degradation ladder.
+    """
+
+    def __init__(self, cfg: TierConfig):
+        self.cfg = cfg
+        self.inflight: List[TierTransfer] = []
+        self.retries = 0
+        self.timeouts = 0
+
+    def submit(self, kind: str, rid: Optional[str], eid: Optional[int],
+               nbytes: int, slow: float = 1.0, **meta) -> TierTransfer:
+        eta = max(1, math.ceil(self.cfg.xfer_ticks * slow))
+        t = TierTransfer(kind=kind, rid=rid, eid=eid, nbytes=nbytes,
+                         eta=eta, meta=meta)
+        self.inflight.append(t)
+        return t
+
+    def cancel(self, pred) -> List[TierTransfer]:
+        """Drop in-flight transfers matching ``pred`` (cancelled request);
+        returns them so the caller can release their resources."""
+        dropped = [t for t in self.inflight if pred(t)]
+        self.inflight = [t for t in self.inflight if not pred(t)]
+        return dropped
+
+    def advance(self, hook) -> Tuple[List[TierTransfer], List[TierTransfer]]:
+        completed: List[TierTransfer] = []
+        failed: List[TierTransfer] = []
+        keep: List[TierTransfer] = []
+        for t in self.inflight:
+            t.age += 1
+            if t.age > self.cfg.timeout_ticks:
+                t.failure = "timeout"
+                self.timeouts += 1
+                failed.append(t)
+                continue
+            if t.backoff > 0:
+                t.backoff -= 1
+                if t.backoff == 0:
+                    # next attempt begins at the link speed of *this* tick
+                    t.eta = max(1, math.ceil(self.cfg.xfer_ticks
+                                             * hook.slow()))
+                keep.append(t)
+                continue
+            t.eta -= 1
+            if t.eta > 0:
+                keep.append(t)
+                continue
+            # the attempt lands this tick — unless the link drops it
+            if hook.drop():
+                t.retries += 1
+                self.retries += 1
+                if t.retries > self.cfg.max_retries:
+                    t.failure = "retries exhausted"
+                    failed.append(t)
+                    continue
+                t.backoff = 2 ** (t.retries - 1)
+                keep.append(t)
+                continue
+            completed.append(t)
+        self.inflight = keep
+        return completed, failed
+
+
+def trim_pages(payload: Any, n: int) -> Any:
+    """Keep the first ``n`` pages (axis 1) of a gathered payload, as host
+    numpy arrays (gathers pad to the static pages-per-slot width)."""
+    return jax.tree.map(lambda a: np.ascontiguousarray(a[:, :n]), payload)
+
+
+def pad_pages(payload: Any, k: int) -> Any:
+    """Zero-pad a host payload back to the static width ``k`` (axis 1) so
+    the install scatter sees one shape; padded rows target the trash page."""
+    def _pad(a):
+        a = np.asarray(a)
+        if a.shape[1] == k:
+            return a
+        pad = np.zeros((a.shape[0], k - a.shape[1]) + a.shape[2:], a.dtype)
+        return np.concatenate([a, pad], axis=1)
+    return jax.tree.map(_pad, payload)
+
+
+def slice_page(payload: Any, j: int) -> Any:
+    """Extract page ``j`` as its own single-page payload (axis 1 kept)."""
+    return jax.tree.map(
+        lambda a: np.ascontiguousarray(np.asarray(a)[:, j:j + 1]), payload)
+
+
+def concat_pages(payloads: List[Any]) -> Any:
+    """Stitch single-page payloads back into one multi-page payload."""
+    return jax.tree.map(lambda *xs: np.concatenate(xs, axis=1), *payloads)

@@ -13,6 +13,15 @@ re-lay them onto any mesh — save on an 8-device mesh, restore on 4 or 2
 (tested). Keep-last-k garbage collection. CRC validation on load guards
 against storage-level corruption (the paper's SDC concern, §6.1).
 
+Robust restart (ISSUE 9): an auto-restore (``step=None``) walks the
+checkpoints newest-first and loads the newest **intact** one — a step
+with a corrupt array, truncated manifest, or missing file is warned
+about and skipped, never silently loaded and never allowed to wedge the
+restart (a crash mid-GC or a bad disk sector must cost one checkpoint
+interval, not the job). Asking for an explicit ``step=`` keeps strict
+semantics: corruption there raises. Malformed ``step_*`` directory names
+(operator debris) are ignored by discovery rather than crashing it.
+
 At true 1000+-node scale arrays would be written per-host into a parallel
 FS (the paper's 3FS); the format here keeps the same manifest contract.
 """
@@ -21,8 +30,9 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 import zlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -66,12 +76,44 @@ def save(directory: str, step: int, tree, extras: Optional[dict] = None,
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _step_ids(directory: str) -> List[int]:
+    """Completed step numbers on disk, tolerant of operator debris: a
+    ``step_foo`` or truncated ``step_`` directory is skipped, not fatal."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    out = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            out.append(int(d.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return sorted(set(out))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _step_ids(directory)
+    return steps[-1] if steps else None
+
+
+def _load_verified(directory: str, step: int) -> Tuple[dict, Any]:
+    """Open one checkpoint and verify it end to end (manifest parses,
+    every array present, every CRC matches). Raises on any defect —
+    callers decide whether that is fatal (explicit step) or a skip
+    (auto-restore fallback)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    for k in manifest["keys"]:
+        if k not in data:
+            raise IOError(f"checkpoint step {step} missing array {k}")
+        crc = zlib.crc32(np.ascontiguousarray(data[k]).tobytes())
+        if crc != manifest["crc"][k]:
+            raise IOError(f"checkpoint corruption detected in {k} "
+                          f"(crc {crc} != {manifest['crc'][k]})")
+    return manifest, data
 
 
 def restore(directory: str, tree_like, step: Optional[int] = None,
@@ -84,19 +126,31 @@ def restore(directory: str, tree_like, step: Optional[int] = None,
     so a restore never materializes throwaway init arrays). With
     ``shardings`` built on a survivor mesh this is the elastic re-mesh:
     state saved on a (2, 4) mesh lands sharded on (1, 4) — arrays are
-    stored logically, so any mesh whose axes divide the shapes works."""
+    stored logically, so any mesh whose axes divide the shapes works.
+
+    ``step=None`` loads the newest **intact** checkpoint: a corrupt or
+    partial newest step is warned about and skipped in favor of the next
+    one back, so a crash mid-write or a flipped bit costs one interval,
+    never the restart. An explicit ``step=`` stays strict and raises."""
     if step is None:
-        step = latest_step(directory)
-        assert step is not None, f"no checkpoints in {directory}"
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "MANIFEST.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    for k in manifest["keys"]:
-        crc = zlib.crc32(np.ascontiguousarray(data[k]).tobytes())
-        if crc != manifest["crc"][k]:
-            raise IOError(f"checkpoint corruption detected in {k} "
-                          f"(crc {crc} != {manifest['crc'][k]})")
+        candidates = _step_ids(directory)
+        assert candidates, f"no checkpoints in {directory}"
+        manifest = data = None
+        for s in reversed(candidates):
+            try:
+                manifest, data = _load_verified(directory, s)
+                step = s
+                break
+            except Exception as e:          # noqa: BLE001 — any defect
+                # (bad zip, truncated json, missing member, CRC) means
+                # this step is unusable; the walk continues backwards
+                warnings.warn(
+                    f"skipping damaged checkpoint step_{s:08d}: {e}")
+        if manifest is None:
+            raise IOError(f"no intact checkpoint in {directory} "
+                          f"(tried steps {candidates})")
+    else:
+        manifest, data = _load_verified(directory, step)
 
     paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
     treedef = jax.tree.structure(tree_like)
@@ -120,8 +174,6 @@ def restore(directory: str, tree_like, step: Optional[int] = None,
 
 
 def _gc(directory: str, keep: int) -> None:
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    for s in _step_ids(directory)[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)

@@ -85,6 +85,29 @@ def test_prefix_parity_gate_fires():
     assert any("COW pages must be read-only" in e for e in errs)
 
 
+def test_kv_tier_ratio_gate_fires():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    hit = False
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-bf16-kv-tier":
+            row["resident_tokens_vs_device_only"] = 2.0
+            hit = True
+    assert hit, "committed artifact must carry the kv-tier row"
+    errs = check_bench.validate_serve(doc)
+    assert any("oversubscription gate" in e for e in errs)
+
+
+def test_kv_tier_stall_and_parity_gates_fire():
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row["cache_layout"] == "paged-bf16-kv-tier":
+            row["prefetch_stalls"] = 3
+            row["streams_equal_pcie_drop"] = False
+    errs = check_bench.validate_serve(doc)
+    assert any("prefetch" in e for e in errs)
+    assert any("pcie_drop" in e for e in errs)
+
+
 def test_missing_schema_key_fires():
     doc = copy.deepcopy(load("BENCH_serve.json"))
     del doc["rows"][0]["tokens_per_s"]

@@ -86,6 +86,44 @@ def test_r1_passes_outside_hot_path_and_with_waiver(tmp_path):
     assert res.waived == 1
 
 
+def test_r1_fails_on_raw_device_put_in_serve_module(tmp_path):
+    """ISSUE 9: tier transfers must go through the staged-transfer
+    helper — a raw ``jax.device_put`` in a serve module is an
+    unaccounted PCIe hop."""
+    res = lint(tmp_path, {"pkg/serve/mytier.py": """
+        import jax
+
+        def install(cache, payload):
+            return jax.device_put(payload)
+    """}, select=["R1"])
+    assert rules_hit(res) == {"R1-host-sync"}
+    assert "staged" in res.diagnostics[0].message
+
+
+def test_r1_staged_transfer_helper_is_the_audited_crossing(tmp_path):
+    """The fixture pair's passing half: calls routed through the helper
+    are clean, and the helper itself carries the audited waiver — the
+    same shape as ``serve/tier.staged_get``/``staged_put``."""
+    res = lint(tmp_path, {
+        "pkg/serve/tier.py": """
+            import jax
+
+            def staged_put(tree):
+                # repro-lint: disable=R1-host-sync -- the staged-transfer
+                # helper: the documented tier host hop, one audited
+                # crossing point
+                return jax.device_put(tree)
+        """,
+        "pkg/serve/engine2.py": """
+            from pkg.serve.tier import staged_put
+
+            def finish_fetch(self, payload):
+                return staged_put(payload)
+        """}, select=["R1"])
+    assert res.diagnostics == []
+    assert res.waived == 1
+
+
 # ---------------------------------------------------------------------------
 # R2 jit-contract
 # ---------------------------------------------------------------------------

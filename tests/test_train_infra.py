@@ -87,6 +87,46 @@ class TestCheckpoint:
             with pytest.raises(Exception):
                 ckpt.restore(d, tree)
 
+    def test_restore_falls_back_to_newest_intact(self, rng):
+        """Corrupt/partial newest steps are warned about and skipped;
+        auto-restore lands on the newest step that verifies end to end.
+        Asking for the bad step explicitly still raises (ISSUE 9)."""
+        tree = {"a": jax.random.normal(rng, (16,))}
+        with tempfile.TemporaryDirectory() as d:
+            for step in (1, 2, 3):
+                ckpt.save(d, step, tree, extras={"step": step}, keep=5)
+            # newest (3): flipped byte in the arrays -> CRC mismatch
+            fn = os.path.join(d, "step_00000003", "arrays.npz")
+            data = bytearray(open(fn, "rb").read())
+            data[-20] ^= 0xFF
+            open(fn, "wb").write(bytes(data))
+            # even newer (4): partial — manifest only, no arrays
+            partial = os.path.join(d, "step_00000004")
+            os.makedirs(partial)
+            with open(os.path.join(partial, "MANIFEST.json"), "w") as f:
+                f.write("{}")
+            with pytest.warns(UserWarning, match="skipping damaged"):
+                got, extras = ckpt.restore(d, tree)
+            assert extras["step"] == 2
+            np.testing.assert_array_equal(np.asarray(got["a"]),
+                                          np.asarray(tree["a"]))
+            # strict path unchanged: explicit bad step raises
+            with pytest.raises(Exception):
+                ckpt.restore(d, tree, step=3)
+
+    def test_latest_step_tolerates_malformed_names(self, rng):
+        tree = {"a": jax.random.normal(rng, (4,))}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 7, tree, extras={"step": 7})
+            os.makedirs(os.path.join(d, "step_junk"))
+            os.makedirs(os.path.join(d, "step_"))
+            assert ckpt.latest_step(d) == 7
+            _, extras = ckpt.restore(d, tree)
+            assert extras["step"] == 7
+            # gc walks the same listing — debris must not crash it either
+            ckpt.save(d, 8, tree, keep=1)
+            assert ckpt.latest_step(d) == 8
+
     def test_elastic_restore_shardings(self, rng):
         """Restore onto explicit (different) shardings — elastic re-mesh."""
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -21,7 +21,9 @@ Checks two layers:
   bytes than ``ep_flat`` (serve decode *and* train step), shared-prefix
   COW saving >= 2x pool pages with streams bitwise-equal to unshared,
   MTP acceptance strictly positive on MTP-headed rows (the dead-draft
-  regression), and the gateway's fault gates (crash-row retries fired,
+  regression), the kv-tier gates (>= 3x resident context tokens vs the
+  device-only pool, zero prefetch stalls, tiered + chaos streams
+  bitwise-equal), and the gateway's fault gates (crash-row retries fired,
   recovered streams bitwise-equal to no-fault, SLO attainment retained
   >= 0.9x).
 
@@ -59,6 +61,15 @@ SERVE_KEYS: Dict[str, tuple] = {
         "pages_saved_vs_unshared", "tokens_equal_unshared",
         "ttft_ms_p50_chunked", "ttft_ms_p50_whole_prompt",
         "pool_pages_free_end"),
+    "paged-bf16-kv-tier": SERVE_COMMON + (
+        "workload", "prefill_chunk", "page_size", "pool_pages",
+        "host_tier_pages", "tier_quantum", "suspensions", "resumes",
+        "spilled_pages", "fetched_pages", "spill_bytes", "fetch_bytes",
+        "prefetch_stalls", "degraded", "peak_resident_pages",
+        "resident_tokens", "device_only_tokens",
+        "resident_tokens_vs_device_only", "tiered_streams_equal",
+        "streams_equal_pcie_slow", "streams_equal_pcie_drop",
+        "pcie_drop_retries"),
 }
 SERVE_KEYS["paged-fp8"] = SERVE_KEYS["paged-bf16"]
 
@@ -78,6 +89,8 @@ FP8_MAX_BYTES_RATIO = 0.55     # paged-fp8 cache bytes vs dense bf16
 FP8_MIN_SLOTS_RATIO = 2.0      # paged-fp8 resident slots vs dense budget
 GATEWAY_SLO_RETENTION = 0.9    # crash-row SLO vs no-fault (serving.md §6)
 PREFIX_MIN_PAGES_SAVED = 2.0   # shared-prefix pool saving (serving.md §7)
+TIER_MIN_RESIDENT_RATIO = 3.0  # kv-tier resident tokens vs device-only
+                               # pool at fixed HBM budget (serving.md §8)
 
 
 def _row_errors(row: dict, required: tuple, label: str) -> List[str]:
@@ -115,6 +128,28 @@ def validate_serve(doc: dict, *, require_sharded: bool = False) -> List[str]:
                     f"{label}: mtp_acceptance must be > 0 — 0.0 over "
                     "hundreds of drafts means the draft path is dead "
                     "(drafting without the MTP KV ring)")
+        if layout == "paged-bf16-kv-tier":
+            if not row.get("tiered_streams_equal"):
+                errs.append(f"{label}: tiered token streams diverge from "
+                            "the untiered engine (spill/fetch must be "
+                            "bitwise-transparent)")
+            ratio = row.get("resident_tokens_vs_device_only", 0)
+            if ratio < TIER_MIN_RESIDENT_RATIO:
+                errs.append(
+                    f"{label}: resident_tokens_vs_device_only {ratio:.2f} "
+                    f"below {TIER_MIN_RESIDENT_RATIO}x (host-tier "
+                    "oversubscription gate, serving.md §8)")
+            if row.get("prefetch_stalls", 1) != 0:
+                errs.append(
+                    f"{label}: prefetch_stalls "
+                    f"{row.get('prefetch_stalls')} != 0 (tiered pages "
+                    "must be re-installed before the decode window "
+                    "reaches them)")
+            for k in ("streams_equal_pcie_slow", "streams_equal_pcie_drop"):
+                if not row.get(k):
+                    errs.append(f"{label}: {k} must hold — transfer "
+                                "retry/backoff and continuation re-queue "
+                                "may not change any delivered stream")
         if layout == "paged-bf16-shared-prefix":
             if not row.get("tokens_equal_unshared"):
                 errs.append(f"{label}: shared-prefix token streams diverge "

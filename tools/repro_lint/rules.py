@@ -27,6 +27,11 @@ TESTS = ("*tests/*", "*test_*.py", "*conftest.py", "*_hypothesis_compat.py")
 
 _SYNC_CALLS = {"jax.device_get", "jax.block_until_ready"}
 _SYNC_METHODS = {"block_until_ready", "item"}
+# host->device transfers: in the serving/training hot path every
+# device<->host crossing must be one of the audited points — the KV
+# tier / disagg hops go through serve/tier's staged_get/staged_put
+# (ISSUE 9); a raw device_put elsewhere is an unaccounted PCIe hop
+_TRANSFER_CALLS = {"jax.device_put"}
 
 
 class HostSyncRule(Rule):
@@ -35,16 +40,20 @@ class HostSyncRule(Rule):
     ``jax.device_get`` / ``block_until_ready`` / ``.item()`` force a
     device->host round trip; one stray call inside the decode chunk loop or
     the train step turns the paper's "one dispatch per chunk" contract into
-    one *sync* per token. Additionally, ``float()``/``int()`` applied
-    inside a ``lax.scan``/``fori_loop``/``while_loop`` body (anywhere, not
-    just hot modules) would force concretization of a traced value at trace
-    time. The engine's single per-chunk sync and the disagg PCIe hop are
+    one *sync* per token. ``jax.device_put`` is the same hop in the other
+    direction: tier/disagg transfers must go through the staged-transfer
+    helper (``serve/tier.staged_get``/``staged_put``, the audited §4.5
+    crossing points), so a raw ``device_put`` in a hot-path module is
+    flagged too. Additionally, ``float()``/``int()`` applied inside a
+    ``lax.scan``/``fori_loop``/``while_loop`` body (anywhere, not just hot
+    modules) would force concretization of a traced value at trace time.
+    The engine's single per-chunk sync and the staged tier/disagg hops are
     the allowlisted dispatch points — waived inline with justification.
     """
 
     name = "R1-host-sync"
-    doc = ("host sync (device_get/block_until_ready/.item, float/int on "
-           "scan-traced values) in serve/train hot paths")
+    doc = ("host sync (device_get/device_put/block_until_ready/.item, "
+           "float/int on scan-traced values) in serve/train hot paths")
     include = ("*serve/*.py", "*train/trainer.py", "*train/fault.py",
                "*parallel/overlap.py")
     exclude = TESTS
@@ -59,6 +68,13 @@ class HostSyncRule(Rule):
                     src, call,
                     f"host sync `{name}` in a hot-path module; move it to "
                     "the per-chunk dispatch point or waive with the reason"))
+            elif name in _TRANSFER_CALLS:
+                out.append(self.diag(
+                    src, call,
+                    f"raw `{name}` in a hot-path module; tier/disagg "
+                    "host hops must go through serve/tier's staged-"
+                    "transfer helper (staged_get/staged_put) or waive "
+                    "with the reason this crossing is audited"))
             elif isinstance(call.func, ast.Attribute) and \
                     call.func.attr in _SYNC_METHODS and not call.args:
                 out.append(self.diag(
