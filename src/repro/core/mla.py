@@ -131,7 +131,9 @@ def init_paged_mla_cache(cfg: ModelConfig, layers: int, pool_pages: int,
     m = cfg.mla
     paged.validate_storage(storage)
     fp8 = storage == "fp8"
-    dt = paged.E4M3 if fp8 else jnp.dtype(cfg.cache_dtype_())
+    # fp8 pools hold raw E4M3 bytes (uint8): native scan/scatter dtype —
+    # see paged._to_store. Values are still E4M3, read via paged.e4m3_decode.
+    dt = jnp.uint8 if fp8 else jnp.dtype(cfg.cache_dtype_())
     P1 = pool_pages + 1
     c = dict(
         ckv=jnp.zeros((layers, P1, page_size, m.kv_lora_rank), dt),
@@ -276,20 +278,29 @@ def mla_paged_decode_step(p: dict, cache: dict, x: jax.Array, *,
     if impl == "pallas" and S == 1:
         from repro.kernels.paged_attention import ops as paged_ops
         ones = jnp.ones(cache["ckv"].shape[:2], jnp.float32)
+        ckv_p, kr_p = new_cache["ckv"], new_cache["kr"]
+        if ckv_p.dtype == jnp.uint8:   # byte pool -> E4M3 view for the kernel
+            ckv_p = jax.lax.bitcast_convert_type(ckv_p, paged.E4M3)
+            kr_p = jax.lax.bitcast_convert_type(kr_p, paged.E4M3)
         o_lat = paged_ops.paged_mla_decode(
             q_abs[:, 0], q_rope[:, 0].astype(jnp.float32),
-            new_cache["ckv"], new_cache["kr"],
+            ckv_p, kr_p,
             new_cache.get("ckv_scale", ones), new_cache.get("kr_scale", ones),
             page_table, qpos, scale=scale)
         o_lat = o_lat[:, None]
     else:
-        ckv_t = paged.table_gather(new_cache["ckv"], page_table)
-        kr_t = paged.table_gather(new_cache["kr"], page_table)
         if fp8:
-            cs_t = paged.table_gather(new_cache["ckv_scale"], page_table)
-            ks_t = paged.table_gather(new_cache["kr_scale"], page_table)
-            ckv_t = paged.dequantize_vecs(ckv_t, cs_t).astype(cfg.dtype)
-            kr_t = paged.dequantize_vecs(kr_t, ks_t).astype(cfg.dtype)
+            # fused byte-gather + LUT dequant (paged.gather_dequant): same
+            # values as table_gather + dequantize_vecs, one pass
+            ckv_t = paged.gather_dequant(new_cache["ckv"],
+                                         new_cache["ckv_scale"],
+                                         page_table).astype(cfg.dtype)
+            kr_t = paged.gather_dequant(new_cache["kr"],
+                                        new_cache["kr_scale"],
+                                        page_table).astype(cfg.dtype)
+        else:
+            ckv_t = paged.table_gather(new_cache["ckv"], page_table)
+            kr_t = paged.table_gather(new_cache["kr"], page_table)
         T = ckv_t.shape[1]
         # positional validity: everything at or below the query's position
         # was written by this slot (pages never ring-wrap). Per-query for

@@ -81,6 +81,43 @@ def pool_model_axes(leaf_name: str, ndim: int):
     return None
 
 
+def e4m3_decode(q: jax.Array) -> jax.Array:
+    """E4M3 -> fp32 via a 256-entry decode table (bit-exact).
+
+    XLA's CPU backend emulates the ``f8E4M3FN -> f32`` convert per element
+    (~5x slower than a byte gather at decode-cache sizes, and the dominant
+    cost of the paged-fp8 hot path). Reading the value through a table
+    indexed by the raw byte is bit-identical to ``astype(float32)`` for
+    every non-NaN code (NaN codes decode to NaN either way) — the kernel
+    property sweep pins all 256 codes. The table itself is built from a
+    constant ``iota`` so XLA folds it at compile time.
+    """
+    lut = jax.lax.bitcast_convert_type(
+        jnp.arange(256, dtype=jnp.uint8), E4M3).astype(jnp.float32)
+    u8 = (q if q.dtype == jnp.uint8
+          else jax.lax.bitcast_convert_type(q, jnp.uint8))
+    return lut[u8.astype(jnp.int32)]
+
+
+def _to_store(pool: jax.Array, vals: jax.Array) -> jax.Array:
+    """Coerce token values to the pool's storage dtype.
+
+    FP8 pools store raw E4M3 *bytes* (uint8): XLA CPU legalizes
+    dynamic-update-slice/scan over f8 operands by round-tripping the whole
+    operand through f16 (per-element emulated — it dominated the paged-fp8
+    decode step), while u8 slices/scatters are native moves. Quantized
+    E4M3 values are bitcast (not value-converted) into the byte pool.
+    Callers write the matching per-token scale sideband (from
+    :func:`quantize_vecs`) into the scale pool alongside — values never
+    travel without their scales; the fallback ``astype`` here only
+    normalizes already-scaled values handed over in E4M3-compatible form.
+    """
+    if pool.dtype == jnp.uint8 and vals.dtype != jnp.uint8:
+        q = vals if vals.dtype == E4M3 else vals.astype(E4M3)
+        return jax.lax.bitcast_convert_type(q, jnp.uint8)
+    return vals.astype(pool.dtype)
+
+
 def quantize_vecs(x: jax.Array, vec_ndim: int = 1
                   ) -> Tuple[jax.Array, jax.Array]:
     """Per-token-vector FP8 quantization.
@@ -101,8 +138,9 @@ def quantize_vecs(x: jax.Array, vec_ndim: int = 1
 def dequantize_vecs(q: jax.Array, scale: jax.Array,
                     vec_ndim: int = 1) -> jax.Array:
     """Inverse of :func:`quantize_vecs` (fp32 out)."""
-    return q.astype(jnp.float32) * scale.reshape(
-        scale.shape + (1,) * vec_ndim)
+    qf = (e4m3_decode(q) if q.dtype in (E4M3, jnp.uint8)
+          else q.astype(jnp.float32))
+    return qf * scale.reshape(scale.shape + (1,) * vec_ndim)
 
 
 # ---------------------------------------------------------------------------
@@ -123,7 +161,7 @@ def page_write(pool: jax.Array, table: jax.Array, positions: jax.Array,
     lp = jnp.clip(positions // page, 0, table.shape[1] - 1)
     off = positions % page
     phys = jnp.take_along_axis(table, lp[:, None], axis=1)[:, 0]
-    return pool.at[phys, off].set(vals.astype(pool.dtype))
+    return pool.at[phys, off].set(_to_store(pool, vals))
 
 
 def page_write_chunk(pool: jax.Array, table: jax.Array, start: jax.Array,
@@ -144,7 +182,7 @@ def page_write_chunk(pool: jax.Array, table: jax.Array, start: jax.Array,
     lp = jnp.clip(lp, 0, table.shape[1] - 1)
     phys = jnp.take_along_axis(table, lp, axis=1)               # (B, n)
     v = vals.reshape((B, n, page) + vals.shape[2:])
-    return pool.at[phys].set(v.astype(pool.dtype))
+    return pool.at[phys].set(_to_store(pool, v))
 
 
 def table_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
@@ -158,6 +196,25 @@ def table_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
     g = pool[table]                                   # (B, pp, page, ...)
     B, pp, page = g.shape[:3]
     return g.reshape((B, pp * page) + g.shape[3:])
+
+
+def gather_dequant(pool: jax.Array, scale_pool: jax.Array,
+                   table: jax.Array, vec_ndim: int = 1) -> jax.Array:
+    """Fused ``table_gather`` + ``dequantize_vecs`` (fp32 out).
+
+    Bit-identical to the unfused pair, but the E4M3 pool is bitcast to
+    bytes *before* the gather so the page gather moves raw uint8 and the
+    convert is a single table lookup (:func:`e4m3_decode`) — the XLA-path
+    fp8 decode hot-path read. Non-fp8 pools gather + upcast directly.
+    """
+    if pool.dtype in (E4M3, jnp.uint8):
+        u8 = (pool if pool.dtype == jnp.uint8
+              else jax.lax.bitcast_convert_type(pool, jnp.uint8))
+        vals = e4m3_decode(table_gather(u8, table))
+    else:
+        vals = table_gather(pool, table).astype(jnp.float32)
+    s = table_gather(scale_pool, table)
+    return vals * s.reshape(s.shape + (1,) * vec_ndim)
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +252,7 @@ def scatter_pages(pool: jax.Array, pages: jax.Array,
     ``(nP,)`` physical page ids (trash-padded entries land in the scratch
     page). Layer-stacked: the scatter covers all ``n`` layers at once.
     """
-    return pool.at[:, ids].set(pages.astype(pool.dtype))
+    return pool.at[:, ids].set(_to_store(pool, pages))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,114 @@
+"""Flash-style bucketed prefill attention kernel.
+
+``Model.prefill`` / ``prefill_chunk`` pad prompts to power-of-two length
+buckets and attend with a full (S, T) score matrix per head
+(``layers._attn_direct``). This kernel computes the same masked softmax
+block-tiled — grid ``(B, H, S/bq, T/bk)`` with an online softmax over the
+key blocks — so prefill attention memory is O(bq*bk) per step instead of
+O(S*T) per head, the standard FlashAttention recurrence over the bucket.
+
+Masking matches ``_attn_direct`` exactly: a key is attendable iff
+``k_pos >= 0`` (pad slots carry ``k_pos = -1`` in decode-cache layouts),
+``k_pos <= q_pos`` under causal, with pads above real positions excluded
+by causality in bucketed prefill. A query row with *no* valid key (a pad
+row past every real token) emits zeros rather than the uniform mix the
+dense softmax produces — pad-row outputs are dropped by the trash-row /
+valid-mask contract (serving.md §2), so only junk differs.
+
+Inputs:
+  q (B, S, H, hd), k/v (B, T, KV, hd) in the compute dtype
+  q_pos (B, S) i32, k_pos (B, T) i32
+Output: (B, S, H, hd) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, causal: bool):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)             # (bq, hd) pre-scaled
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq, bk)
+    qp = qp_ref[0][:, None]                            # (bq, 1)
+    kp = kp_ref[0][None, :]                            # (1, bk)
+    valid = kp >= 0
+    if causal:
+        valid = valid & (kp <= qp)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)      # (bq, bk)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _emit():
+        o_ref[0, :, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "bq", "bk",
+                                    "interpret"))
+def flash_prefill_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                         q_pos: jax.Array, k_pos: jax.Array, *,
+                         causal: bool, scale: float, bq: int, bk: int,
+                         interpret: bool = False) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,T,KV,hd); q_pos (B,S); k_pos (B,T). S % bq and
+    T % bk must be 0 (power-of-two buckets make that free). Each (b, h)
+    walks its KV head's key blocks; GQA maps query head h to KV head
+    ``h // (H // KV)`` in the index maps."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    from jax.experimental.pallas import tpu as pltpu
+
+    qf = q.astype(jnp.float32) * scale
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, H, S // bq, T // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, qi, ki: (b, qi)),
+            pl.BlockSpec((1, bk), lambda b, h, qi, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, causal=causal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+        interpret=interpret,
+    )(qf, k, v, q_pos, k_pos)

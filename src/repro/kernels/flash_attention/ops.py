@@ -1,0 +1,51 @@
+"""Registry entry point for the flash bucketed-prefill attention kernel.
+
+``flash_prefill(q, k, v, q_pos, k_pos, causal=..., scale=...)``
+dispatches through ``repro.kernels.registry``: ``pallas``/``interpret``
+run the block-tiled online-softmax recurrence (block sizes from the
+shape-bucketed table below — power-of-two prefill buckets divide them
+evenly); ``ref`` is the full-matrix jnp oracle. Pad rows (no valid key)
+emit zeros on every backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import registry
+from repro.kernels.flash_attention.flash_attention import \
+    flash_prefill_kernel
+from repro.kernels.flash_attention.ref import flash_prefill_ref
+
+# rows per query/key block: small buckets take the whole bucket in one
+# block; larger ones tile at 128 (MXU-aligned, ~bq*bk fp32 scores in VMEM)
+BLOCKS = registry.BlockTable({
+    1: dict(bq=8, bk=8),
+    16: dict(bq=16, bk=16),
+    32: dict(bq=32, bk=32),
+    128: dict(bq=128, bk=128),
+})
+
+flash_prefill = registry.kernel("flash_prefill", blocks=BLOCKS)
+
+
+@flash_prefill.backend("ref")
+@functools.partial(jax.jit, static_argnames=("causal", "scale"))
+def _flash_prefill_ref(q, k, v, q_pos, k_pos, *, causal: bool,
+                       scale: float):
+    return flash_prefill_ref(q, k, v, q_pos, k_pos, causal=causal,
+                             scale=scale)
+
+
+@flash_prefill.backend("pallas", "interpret")
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "scale", "interpret"))
+def _flash_prefill_kernel(q, k, v, q_pos, k_pos, *, causal: bool,
+                          scale: float, interpret: bool):
+    S, T = q.shape[1], k.shape[1]
+    bq = min(BLOCKS.block(S, "bq"), S)
+    bk = min(BLOCKS.block(T, "bk"), T)
+    return flash_prefill_kernel(q, k, v, q_pos, k_pos, causal=causal,
+                                scale=scale, bq=bq, bk=bk,
+                                interpret=interpret)

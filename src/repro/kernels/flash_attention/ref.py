@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash prefill kernel.
+
+Mirrors ``layers._attn_direct`` masking (k_pos >= 0, causal k_pos <=
+q_pos) with one deliberate difference: query rows with no valid key emit
+zeros (the kernel's empty online softmax) instead of a uniform mix, so
+the oracle and the kernel agree on pad rows too.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, q_pos, k_pos, *, causal: bool,
+                      scale: float):
+    """q (B,S,H,hd); k/v (B,T,KV,hd); q_pos (B,S); k_pos (B,T).
+    Returns (B,S,H,hd) fp32."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, S, KV, G, hd) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, kf)
+    valid = k_pos[:, None, :] >= 0                     # (B, S?, T)
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])
+    s = jnp.where(valid[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # empty rows (no valid key) emit zeros, matching the kernel
+    any_valid = jnp.any(valid, axis=-1)                # (B, S)
+    p = p * any_valid[:, None, None, :, None]
+    o = jnp.einsum("bkgst,btkh->bskgh", p, vf)
+    return o.reshape(B, S, H, hd)

@@ -16,9 +16,10 @@ import functools
 import jax
 
 from repro.kernels import registry
-from repro.kernels.paged_attention.paged_attention import \
-    paged_mla_decode_kernel
-from repro.kernels.paged_attention.ref import paged_mla_decode_ref
+from repro.kernels.paged_attention.paged_attention import (
+    paged_gqa_decode_kernel, paged_mla_decode_kernel)
+from repro.kernels.paged_attention.ref import (paged_gqa_decode_ref,
+                                               paged_mla_decode_ref)
 
 paged_mla_decode = registry.kernel("paged_mla_decode")
 
@@ -38,3 +39,20 @@ def _paged_mla_decode_kernel(q_abs, q_rope, ckv, kr, ckv_s, kr_s, table,
     return paged_mla_decode_kernel(q_abs, q_rope, ckv, kr, ckv_s, kr_s,
                                    table, qpos, scale=scale,
                                    interpret=interpret)
+
+
+paged_gqa_decode = registry.kernel("paged_gqa_decode")
+
+
+@paged_gqa_decode.backend("ref")
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _paged_gqa_decode_ref(q, k, v, k_s, v_s, table, qpos, *, scale: float):
+    return paged_gqa_decode_ref(q, k, v, k_s, v_s, table, qpos, scale=scale)
+
+
+@paged_gqa_decode.backend("pallas", "interpret")
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _paged_gqa_decode_kernel(q, k, v, k_s, v_s, table, qpos, *,
+                             scale: float, interpret: bool):
+    return paged_gqa_decode_kernel(q, k, v, k_s, v_s, table, qpos,
+                                   scale=scale, interpret=interpret)

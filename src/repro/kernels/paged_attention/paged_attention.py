@@ -126,3 +126,99 @@ def paged_mla_decode_kernel(q_abs: jax.Array, q_rope: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, H, R), jnp.float32),
         interpret=interpret,
     )(table, qpos, qa, qr, ckv, kr, ckv_s, kr_s)
+
+
+def _gqa_kernel(table_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                o_ref, m_ref, l_ref, acc_ref, *, page: int):
+    """Grid (B, KV, pp): one KV head's page run per (b, kv); the G query
+    heads of that group ride along in the block (GQA broadcasting is the
+    (G, page) score tile against one shared K page)."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                    # (G, hd) pre-scaled
+    # in-register dequantization: one fp32 scale per token row
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0][:, None]  # (page, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0][:, None]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, page)
+    # positional validity: logical row index vs current decode position
+    lpos = t * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = lpos <= qpos_ref[b]                        # (1, page)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)      # (G, page)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_gqa_decode_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_s: jax.Array, v_s: jax.Array,
+                            table: jax.Array, qpos: jax.Array, *,
+                            scale: float,
+                            interpret: bool = False) -> jax.Array:
+    """Paged GQA decode: same scalar-prefetch page walk as the MLA kernel,
+    with the head axis split (KV, G) so each grid step streams one KV
+    head's page while its G query heads accumulate online-softmax state.
+
+    q (B, H, hd) f32; k/v (P+1, page, KV, hd) E4M3 or native; k_s/v_s
+    (P+1, page) f32 per-token scales (ones for native storage); table
+    (B, pp) physical page ids; qpos (B,). Returns (B, H, hd) f32.
+    """
+    B, H, hd = q.shape
+    page, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    pp = table.shape[1]
+    from jax.experimental.pallas import tpu as pltpu
+
+    # scale folded into q (fp8 rows carry per-token scales, so the score
+    # scale distributes onto the query side for free); head axis factors
+    # as (KV, G) — the _split_heads / _attn_direct convention
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # table, qpos
+        grid=(B, KV, pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, kv, t, tbl, qp: (b, kv, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kv, t, tbl, qp: (tbl[b, t], 0, kv, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kv, t, tbl, qp: (tbl[b, t], 0, kv, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, kv, t, tbl, qp: (tbl[b, t], 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, kv, t, tbl, qp: (tbl[b, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kv, t, tbl, qp: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gqa_kernel, page=page),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(table, qpos, qf, k, v, k_s, v_s)
+    return out.reshape(B, H, hd)

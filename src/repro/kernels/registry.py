@@ -68,6 +68,7 @@ _KERNEL_MODULES = (
     "repro.kernels.moe_gemm.ops",
     "repro.kernels.logfmt.ops",
     "repro.kernels.paged_attention.ops",
+    "repro.kernels.flash_attention.ops",
 )
 
 _REGISTRY: Dict[str, "KernelOp"] = {}

@@ -336,6 +336,12 @@ class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.segments = _segments(cfg)
+        # Attention-impl overrides merged into the serving-path ctx dicts
+        # (prefill / prefill_chunk / decode_step). E.g. {"gqa_impl":
+        # "pallas"} routes GQA decode through the paged scalar-prefetch
+        # kernel and prefill through the flash bucketed kernel. Empty ->
+        # default XLA path everywhere; training paths never read it.
+        self.impl_ctx: Dict[str, Any] = {}
 
     # -- specs / init ------------------------------------------------------
     def specs(self) -> dict:
@@ -549,7 +555,8 @@ class Model:
         tokens = batch["tokens"]
         B, S = tokens.shape
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        ctx = dict(positions=pos, causal=True, collect_cache=True)
+        ctx = dict(positions=pos, causal=True, collect_cache=True,
+                   **self.impl_ctx)
         if lengths is not None:
             lengths = jnp.asarray(lengths, jnp.int32)
             ctx["valid"] = pos < lengths[:, None]
@@ -665,7 +672,7 @@ class Model:
         table = jnp.asarray(row, jnp.int32)
         ctx = dict(positions=positions, causal=True, page_table=table,
                    valid=positions < lengths[:, None],
-                   prompt_lengths=lengths)
+                   prompt_lengths=lengths, **self.impl_ctx)
         h, new_caches, _, ctx = self._backbone(params, tokens, ctx, cache, {})
         out_cache = dict(cache)
         out_cache.update(new_caches)
@@ -773,7 +780,7 @@ class Model:
         as a top-level leaf; it is threaded to every layer via ctx (one
         (B, pages) array shared by the whole stack, not scanned)."""
         cfg = self.cfg
-        ctx = dict(positions=positions, causal=True)
+        ctx = dict(positions=positions, causal=True, **self.impl_ctx)
         if "page_table" in cache:
             ctx["page_table"] = cache["page_table"]
         extras = {"memory": cache["memory"]} if "memory" in cache else {}
@@ -819,7 +826,8 @@ class Model:
 
     def decode_loop(self, params, cache, state, k: int, *,
                     temperature: float = 0.0, top_k: int = 0,
-                    use_mtp: bool = False, pctx=None):
+                    use_mtp: bool = False, overlap: bool = False,
+                    pctx=None):
         """Run ``k`` fused decode steps under one ``lax.scan``.
 
         Everything the per-token host loop used to do round-trips for
@@ -838,16 +846,29 @@ class Model:
         ``loss(pctx=)``): the sharded serving engine threads its ctx here
         so every scanned decode step's MoE routes through the EP
         shard_map — the paper's decode-side large-EP deployment.
+
+        ``overlap=True`` runs the batch as two anti-phase half-batches
+        through one scanned layer step (``parallel/overlap.
+        dual_decode_step``) so each half's MoE all-to-alls can fly under
+        the other half's dense compute — the paper's §2.3.1 dual
+        microbatch applied to decode. Dense caches only (paged pools are
+        shared across slots and cannot be split), no MTP, even batch.
         """
+        if overlap:
+            if use_mtp:
+                raise ValueError("decode overlap is incompatible with "
+                                 "use_mtp: the draft ring is not split")
+            inner = functools.partial(self._decode_loop_dual,
+                                      temperature=temperature, top_k=top_k)
+        else:
+            inner = functools.partial(self._decode_loop_inner,
+                                      temperature=temperature, top_k=top_k,
+                                      use_mtp=use_mtp)
         if pctx is not None:
             from repro.parallel import context as pctx_mod
             with pctx_mod.use(pctx):
-                return self._decode_loop_inner(
-                    params, cache, state, k, temperature=temperature,
-                    top_k=top_k, use_mtp=use_mtp)
-        return self._decode_loop_inner(params, cache, state, k,
-                                       temperature=temperature,
-                                       top_k=top_k, use_mtp=use_mtp)
+                return inner(params, cache, state, k)
+        return inner(params, cache, state, k)
 
     def _decode_loop_inner(self, params, cache, state, k: int, *,
                            temperature: float, top_k: int, use_mtp: bool):
@@ -904,6 +925,98 @@ class Model:
         (cache, state), (toks, was_active) = jax.lax.scan(
             body, (cache, state), None, length=k)
         return toks.T, was_active.T, cache, state
+
+    def _dense_cache_axes(self, cache) -> Dict[str, Any]:
+        """Batch-axis per leaf of an *actual* dense decode cache pytree
+        (``cache_batch_axes`` keyed off the cache in hand instead of a
+        rebuilt struct — chunked decode carries exactly these leaves)."""
+        kinds = {seg.name: seg.kind for seg in self.segments}
+        axes: Dict[str, Any] = {}
+        for key, sub in cache.items():
+            if key in ("memory", "mtp_h"):
+                axes[key] = 0
+            elif key == "mtp":
+                axes[key] = jax.tree.map(lambda _: 1, sub)
+            else:
+                ax = 2 if kinds[key] == "vision_pattern" else 1
+                axes[key] = jax.tree.map(lambda _: ax, sub)
+        return axes
+
+    def _decode_loop_dual(self, params, cache, state, k: int, *,
+                          temperature: float, top_k: int):
+        """``_decode_loop_inner`` over two anti-phase half-batches.
+
+        Splits cache + state at the batch axis, runs each fused step
+        through ``overlap.dual_decode_step`` (both halves' layer ops in
+        ONE scan body, so their MoE all-to-alls are schedulable under the
+        neighbor's compute), and concatenates the halves back — slot ``i``
+        keeps index ``i``, token streams are bitwise those of the single
+        path when routing is deterministic per token.
+        """
+        from repro.parallel import overlap
+        B = state["tokens"].shape[0]
+        if B % 2:
+            raise ValueError(f"decode overlap needs an even batch, got {B}")
+        if "page_table" in cache:
+            raise ValueError(
+                "decode overlap requires a dense cache: paged page pools "
+                "are shared across slots and have no batch axis to split")
+        if "memory" in cache:
+            raise ValueError("decode overlap supports decoder-only "
+                             "caches (enc/vlm memory is not threaded "
+                             "through the dual step)")
+        b = B // 2
+        axes = self._dense_cache_axes(cache)
+
+        def csplit(i):
+            return jax.tree.map(
+                lambda x, ax: jax.lax.slice_in_dim(x, i * b, (i + 1) * b,
+                                                   axis=ax), cache, axes)
+
+        def ssplit(st, i):
+            return {kk: (v[i * b:(i + 1) * b] if v.ndim else v)
+                    for kk, v in st.items()}
+
+        cacheA, cacheB = csplit(0), csplit(1)
+        stA, stB = ssplit(state, 0), ssplit(state, 1)
+
+        def sample(logits, key):
+            return sample_logits(logits, key, temperature, top_k)
+
+        def substep(logits, st):
+            keys = jax.vmap(jax.random.fold_in)(st["rngs"], st["tix"])
+            nxt = jax.vmap(sample)(logits[:, 0], keys)
+            active, left, eos = st["active"], st["left"], st["eos"]
+            emitted = jnp.where(active, nxt, -1)
+            left2 = left - active
+            done = active & (((eos >= 0) & (nxt == eos)) | (left2 <= 0))
+            st2 = dict(tokens=jnp.where(active, nxt, st["tokens"]),
+                       positions=st["positions"] + active,
+                       active=active & ~done, left=left2, eos=eos,
+                       rngs=st["rngs"], tix=st["tix"] + active,
+                       drafts=st["drafts"], accepted=st["accepted"])
+            return emitted, active, st2
+
+        def body(carry, _):
+            cA, cB, sA, sB = carry
+            la, lb, cA, cB = overlap.dual_decode_step(
+                self, params, cA, cB,
+                sA["tokens"][:, None], sB["tokens"][:, None],
+                sA["positions"][:, None], sB["positions"][:, None])
+            eA, aA, sA = substep(la, sA)
+            eB, aB, sB = substep(lb, sB)
+            return (cA, cB, sA, sB), (eA, eB, aA, aB)
+
+        (cacheA, cacheB, stA, stB), (tA, tB, aA, aB) = jax.lax.scan(
+            body, (cacheA, cacheB, stA, stB), None, length=k)
+        cache = jax.tree.map(
+            lambda a, bb, ax: jnp.concatenate([a, bb], axis=ax),
+            cacheA, cacheB, axes)
+        state = {kk: (jnp.concatenate([stA[kk], stB[kk]], axis=0)
+                      if stA[kk].ndim else stA[kk]) for kk in stA}
+        toks = jnp.concatenate([tA, tB], axis=1)        # (k, B)
+        emitted = jnp.concatenate([aA, aB], axis=1)
+        return toks.T, emitted.T, cache, state
 
     # -- cache/init specs ----------------------------------------------------
     def _init_mtp_ring(self, batch: int, max_len: int):

@@ -135,14 +135,24 @@ ATTN_BLOCK_Q = 512
 
 def attention_scores(q, k, v, *, causal: bool, q_pos, k_pos,
                      window: int = 0, scale: float = 0.0,
-                     block_q: int = 0):
+                     block_q: int = 0, impl: str = "xla"):
     """Chunked attention: scan over query blocks; each block's S_b x T
     score tile lives only transiently (and is recomputed in backward via
     jax.checkpoint). This bounds attention memory to O(B*H*block_q*T) per
     device instead of O(B*H*S*T) — required for the 32k prefill cells and
-    a first-class memory-roofline lever (EXPERIMENTS.md §Perf)."""
+    a first-class memory-roofline lever (EXPERIMENTS.md §Perf).
+
+    ``impl="pallas"`` dispatches multi-token unwindowed attention through
+    the ``flash_prefill`` registry kernel (block-tiled online softmax over
+    the power-of-two bucket — no full S x T score matrix at all)."""
     B, S, H, hd = q.shape
     scale = scale or 1.0 / math.sqrt(hd)
+    if (impl == "pallas" and S > 1 and not window
+            and k.shape[-1] == hd and v.shape[-1] == hd):
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_prefill(q, k, v, q_pos, k_pos,
+                                      causal=causal, scale=scale)
+        return out.astype(v.dtype)
     bq = block_q or ATTN_BLOCK_Q
     if S <= bq or S % bq != 0:
         return _attn_direct(q, k, v, causal=causal, q_pos=q_pos,
@@ -171,7 +181,8 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
                   cache: Optional[dict] = None,
                   kv_x: Optional[jax.Array] = None,
                   kv_positions: Optional[jax.Array] = None,
-                  page_table: Optional[jax.Array] = None):
+                  page_table: Optional[jax.Array] = None,
+                  impl: str = "xla"):
     """GQA self/cross attention. If ``cache`` is given, appends this step's
     K/V at slot ``positions`` and attends over the cache (decode). If
     ``kv_x`` is given, cross-attention over that memory (no cache logic).
@@ -230,24 +241,43 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
         else:
             new_cache["k"] = pwrite(cache["k"], k)
             new_cache["v"] = pwrite(cache["v"], v)
-        kc = paged.table_gather(new_cache["k"], page_table)
-        vc = paged.table_gather(new_cache["v"], page_table)
-        if fp8:
-            ks = paged.table_gather(new_cache["k_scale"], page_table)
-            vs = paged.table_gather(new_cache["v_scale"], page_table)
-            kc = paged.dequantize_vecs(kc, ks, vec_ndim=2).astype(cfg.dtype)
-            vc = paged.dequantize_vecs(vc, vs, vec_ndim=2).astype(cfg.dtype)
+        if impl == "pallas" and S == 1 and not window:
+            # registry-dispatched scalar-prefetch kernel: walks the page
+            # table in SMEM, dequantizes E4M3 rows in-register, online
+            # softmax with GQA head-group broadcasting — no host-side
+            # gather/dequant round-trip (docs/kernel_backends.md)
+            from repro.kernels.paged_attention import ops as paged_ops
+            ones = jnp.ones(cache["k"].shape[:2], jnp.float32)
+            kp, vp = new_cache["k"], new_cache["v"]
+            if kp.dtype == jnp.uint8:  # byte pool -> E4M3 view for the kernel
+                kp = jax.lax.bitcast_convert_type(kp, paged.E4M3)
+                vp = jax.lax.bitcast_convert_type(vp, paged.E4M3)
+            o = paged_ops.paged_gqa_decode(
+                q[:, 0].astype(jnp.float32),
+                kp, vp,
+                new_cache.get("k_scale", ones), new_cache.get("v_scale", ones),
+                page_table, qpos, scale=1.0 / math.sqrt(hd))
+            out = o[:, None].astype(cfg.dtype)
         else:
-            kc = kc.astype(cfg.dtype) if kc.dtype != jnp.dtype(cfg.dtype) else kc
-            vc = vc.astype(cfg.dtype) if vc.dtype != jnp.dtype(cfg.dtype) else vc
-        # positional validity: k_pos is the logical index itself (pages
-        # never ring-wrap), so attention_scores' mask k_pos <= q_pos is
-        # exactly "written by this slot"; stale/trash rows sit above qpos
-        T = kc.shape[1]
-        kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :],
-                                (kc.shape[0], T))
-        out = attention_scores(q, kc, vc, causal=causal,
-                               q_pos=positions, k_pos=kpos, window=window)
+            if fp8:
+                kc = paged.gather_dequant(new_cache["k"], new_cache["k_scale"],
+                                          page_table, vec_ndim=2).astype(cfg.dtype)
+                vc = paged.gather_dequant(new_cache["v"], new_cache["v_scale"],
+                                          page_table, vec_ndim=2).astype(cfg.dtype)
+            else:
+                kc = paged.table_gather(new_cache["k"], page_table)
+                vc = paged.table_gather(new_cache["v"], page_table)
+                kc = kc.astype(cfg.dtype) if kc.dtype != jnp.dtype(cfg.dtype) else kc
+                vc = vc.astype(cfg.dtype) if vc.dtype != jnp.dtype(cfg.dtype) else vc
+            # positional validity: k_pos is the logical index itself (pages
+            # never ring-wrap), so attention_scores' mask k_pos <= q_pos is
+            # exactly "written by this slot"; stale/trash rows sit above qpos
+            T = kc.shape[1]
+            kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None, :],
+                                    (kc.shape[0], T))
+            out = attention_scores(q, kc, vc, causal=causal,
+                                   q_pos=positions, k_pos=kpos,
+                                   window=window, impl=impl)
     elif cache is not None:
         # decode: write k,v (B,1,KV,hd) at ring slot position %% T per batch
         T = cache["k"].shape[1]
@@ -262,10 +292,12 @@ def gqa_attention(p: dict, x: jax.Array, *, cfg: ModelConfig,
         kc = ck.astype(cfg.dtype) if ck.dtype != jnp.dtype(cfg.dtype) else ck
         vc = cv.astype(cfg.dtype) if cv.dtype != jnp.dtype(cfg.dtype) else cv
         out = attention_scores(q, kc, vc, causal=causal,
-                               q_pos=positions, k_pos=cpos, window=window)
+                               q_pos=positions, k_pos=cpos, window=window,
+                               impl=impl)
     else:
         out = attention_scores(q, k, v, causal=causal,
-                               q_pos=positions, k_pos=k_pos, window=window)
+                               q_pos=positions, k_pos=k_pos, window=window,
+                               impl=impl)
     out = out.reshape(out.shape[:-2] + (cfg.num_heads * hd,))
     return linear(out, p["wo"], cfg), new_cache
 
@@ -297,7 +329,9 @@ def init_paged_gqa_cache(cfg: ModelConfig, layers: int, pool_pages: int,
     paged.validate_storage(storage)
     fp8 = storage == "fp8"
     hd = cfg.head_dim_()
-    dt = paged.E4M3 if fp8 else jnp.dtype(cfg.cache_dtype_())
+    # fp8 pools hold raw E4M3 bytes (uint8): native scan/scatter dtype —
+    # see paged._to_store. Values are still E4M3, read via paged.e4m3_decode.
+    dt = jnp.uint8 if fp8 else jnp.dtype(cfg.cache_dtype_())
     P1 = pool_pages + 1
     c = dict(
         k=jnp.zeros((layers, P1, page_size, cfg.num_kv_heads, hd), dt),

@@ -133,7 +133,8 @@ def _self_attention(p: dict, h: jax.Array, cfg: ModelConfig, ctx: dict,
     out, new_cache = Lyr.gqa_attention(
         p, h, cfg=cfg, positions=ctx["positions"],
         causal=ctx.get("causal", True), window=window, cache=cache,
-        page_table=ctx["page_table"] if paged else None)
+        page_table=ctx["page_table"] if paged else None,
+        impl=ctx.get("gqa_impl", "xla"))
     if cache is None and ctx.get("collect_cache"):
         # prefill: return this layer's K/V entries for cache assembly
         src = h

@@ -131,6 +131,69 @@ def dual_microbatch_loss(model: Model, params, batchA: Dict, batchB: Dict):
     return dual_loss_and_metrics(model, params, batchA, batchB)[0]
 
 
+def dual_decode_step(model: Model, params, cacheA, cacheB, tokA, tokB,
+                     posA, posB):
+    """One decode step for two half-batches through ONE scanned layer step.
+
+    The serving-side mirror of :func:`dual_backbone`: each half carries its
+    own dense decode cache, and the two halves' ops inside the shared scan
+    body are independent chains — half B's MoE dispatch all-to-all has no
+    data dependency on half A's expert GEMMs (or attention), so the
+    latency-hiding scheduler can fly one half's decode all-to-alls under
+    the other half's compute, the paper's §2.3.1 overlap applied to the
+    decode pod. ``while_body_op_counts`` on the lowering shows both
+    halves' all-to-alls in a single while body (2x the single-batch
+    count over half-sized operands — same wire bytes, overlappable).
+
+    tokA/tokB (b, 1) int32; posA/posB (b, 1) int32; caches are per-half
+    slices of a dense decode cache (batch axes per
+    ``Model.cache_batch_axes``). Returns ``(logitsA, logitsB, new_cacheA,
+    new_cacheB)``. Dense caches only — paged pools are shared across
+    slots and have no batch axis to split.
+    """
+    cfg = model.cfg
+    from repro.parallel import context as pctx
+    from repro.parallel.context import shard_act
+
+    ctxA = dict(positions=posA, causal=True, **model.impl_ctx)
+    ctxB = dict(positions=posB, causal=True, **model.impl_ctx)
+    xA = model._embed(params, tokA)
+    xB = model._embed(params, tokB)
+    newA: Dict[str, dict] = {}
+    newB: Dict[str, dict] = {}
+    for seg in model.segments:
+        p = params[seg.name]
+        cA = cacheA.get(seg.name)
+        cB = cacheB.get(seg.name)
+
+        def step(carry, xs):
+            hA, hB = carry
+            ps, csA, csB = xs
+            ps = _diff_barrier(ps)
+            if csA is not None:
+                csA = _diff_barrier(csA)
+            if csB is not None:
+                csB = _diff_barrier(csB)
+            hA, ncA, _ = _apply_kind(seg, ps, hA, cfg, ctxA, csA)
+            hB, ncB, _ = _apply_kind(seg, ps, hB, cfg, ctxB, csB)
+            return (shard_act(hA), shard_act(hB)), (ncA, ncB)
+
+        step = apply_remat(step, pctx.get().remat)
+        (xA, xB), (ncA, ncB) = jax.lax.scan(step, (xA, xB), (p, cA, cB))
+        if ncA is not None:
+            newA[seg.name] = ncA
+            newB[seg.name] = ncB
+    outA = dict(cacheA)
+    outA.update(newA)
+    outB = dict(cacheB)
+    outB.update(newB)
+    if "mtp_h" in outA:     # mirror decode_step's carried hidden (the
+        outA["mtp_h"] = xA  # MTP draft itself is excluded under overlap)
+        outB["mtp_h"] = xB
+    return (model._unembed(params, xA), model._unembed(params, xB),
+            outA, outB)
+
+
 # ---------------------------------------------------------------------------
 # HLO inspection utilities (tests + train bench)
 # ---------------------------------------------------------------------------

@@ -182,9 +182,19 @@ class ServeEngine:
                  host_tier_pages: Optional[int] = None,
                  tier_config: Optional[tier_mod.TierConfig] = None,
                  tier_faults=None,
+                 attn_impl: str = "",
+                 decode_overlap: bool = False,
                  ctx: Optional[pctx_mod.ParallelCtx] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
+        if attn_impl:
+            # route attention through the registry kernels ("pallas":
+            # paged scalar-prefetch GQA/MLA decode + flash bucketed
+            # prefill) instead of the default XLA ("xla") path — merged
+            # into every serving-path ctx by the model
+            self.model.impl_ctx = {"gqa_impl": attn_impl,
+                                   "mla_impl": attn_impl}
+        self.attn_impl = attn_impl
         self.ctx = ctx
         self.meshed = ctx is not None and ctx.mesh is not None
         self.params = (params if params is not None
@@ -192,6 +202,23 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.use_mtp = use_mtp and cfg.mtp is not None
+        self.decode_overlap = decode_overlap
+        if decode_overlap:
+            # §2.3.1 dual-microbatch decode: the fused chunk runs the
+            # slots as two anti-phase halves so each half's EP
+            # all-to-alls overlap the other's dense compute
+            if paged:
+                raise ValueError(
+                    "decode_overlap requires a dense cache: paged page "
+                    "pools are shared across slots and cannot be split "
+                    "into independent halves")
+            if self.use_mtp:
+                raise ValueError("decode_overlap is incompatible with "
+                                 "use_mtp: the MTP draft ring is not "
+                                 "split across halves")
+            if slots % 2:
+                raise ValueError(f"decode_overlap needs an even slot "
+                                 f"count, got {slots}")
         self.chunk = chunk
         self.temperature = temperature
         self.top_k = top_k
@@ -452,7 +479,8 @@ class ServeEngine:
             return self.model.decode_loop(
                 params, cache, state, self.chunk,
                 temperature=self.temperature, top_k=self.top_k,
-                use_mtp=self.use_mtp, pctx=self.ctx)
+                use_mtp=self.use_mtp, overlap=self.decode_overlap,
+                pctx=self.ctx)
 
         decode_out = None
         if self.meshed:

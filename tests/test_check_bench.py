@@ -147,3 +147,46 @@ def test_unknown_suite_rejected(tmp_path):
     p.write_text(json.dumps({"suite": "other", "rows": []}))
     assert check_bench.check_file(str(p)) == ["unknown suite 'other'"]
     assert check_bench.main([str(p)]) == 1
+
+
+def test_fp8_gqa_throughput_gate_fires():
+    """The ISSUE 10 tentpole gate: paged-fp8 GQA decode must hold >=
+    0.85x paged-bf16 tok/s (byte-stored pools + LUT decode; the
+    pre-kernel XLA f8 emulation ran at ~0.30x)."""
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    hit = False
+    for row in doc["rows"]:
+        if (row["cache_layout"] == "paged-fp8"
+                and row.get("attention") == "gqa"):
+            row["tokens_per_s"] = 1.0
+            hit = True
+    assert hit, "committed artifact must carry a paged-fp8 GQA row"
+    errs = check_bench.validate_serve(doc)
+    assert any("byte-stored" in e for e in errs)
+
+
+def test_overlap_alltoall_ops_gate_fires():
+    """Overlapped decode must carry BOTH halves' a2a in ONE scan body:
+    an op count that is not exactly 2x the single-scan count fails."""
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    hit = False
+    for row in doc["rows"]:
+        if row["cache_layout"] == "dense-sharded":
+            row["overlap_decode_alltoall_ops_per_scan"] = (
+                row["decode_alltoall_ops_per_scan"])   # two sequential scans
+            hit = True
+    assert hit, "committed artifact must carry dense-sharded rows"
+    errs = check_bench.validate_serve(doc)
+    assert any("BOTH" in e and "one scan body" in e for e in errs)
+
+
+def test_overlap_alltoall_bytes_gate_fires():
+    """Overlap a2a bytes outside [1x, 2x] single-scan bytes fail (above
+    2x means redundant traffic beyond the capacity-floor padding)."""
+    doc = copy.deepcopy(load("BENCH_serve.json"))
+    for row in doc["rows"]:
+        if row["cache_layout"] == "dense-sharded":
+            row["overlap_decode_alltoall_bytes"] = (
+                3 * row["decode_alltoall_bytes"])
+    errs = check_bench.validate_serve(doc)
+    assert any("outside [1x, 2x]" in e for e in errs)

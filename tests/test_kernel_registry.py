@@ -236,6 +236,44 @@ def _paged_mla_case(dims, storage):
     return build, _allclose(1e-4, 1e-4)
 
 
+def _paged_gqa_case(dims, storage):
+    def build(rng):
+        from repro.core import paged
+        B, H, KV, hd, pool, page, pp = dims
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (pool + 1, page, KV, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (pool + 1, page, KV, hd), jnp.float32)
+        if storage == "fp8":
+            k, k_s = paged.quantize_vecs(k, vec_ndim=2)
+            v, v_s = paged.quantize_vecs(v, vec_ndim=2)
+        else:
+            k_s = jnp.ones((pool + 1, page), jnp.float32)
+            v_s = jnp.ones((pool + 1, page), jnp.float32)
+        ids = jax.random.permutation(jax.random.PRNGKey(7), pool)[:B * pp]
+        table = ids.reshape(B, pp).astype(jnp.int32)
+        qpos = jnp.arange(B, dtype=jnp.int32) * 3 + (pp * page) // 2
+        return (q, k, v, k_s, v_s, table, qpos), dict(scale=0.13)
+    return build, _allclose(1e-4, 1e-4)
+
+
+def _flash_prefill_case(dims, dtype, causal):
+    def build(rng):
+        B, S, T, H, KV, hd = dims
+        ks = jax.random.split(rng, 4)
+        q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+        k = jax.random.normal(ks[1], (B, T, KV, hd)).astype(dtype)
+        v = jax.random.normal(ks[2], (B, T, KV, hd)).astype(dtype)
+        qp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        # ragged rows: row b keeps T - b real keys, pads carry kpos = -1
+        lens = T - jnp.arange(B, dtype=jnp.int32)
+        kp = jnp.where(jnp.arange(T)[None, :] < lens[:, None],
+                       jnp.arange(T, dtype=jnp.int32)[None, :], -1)
+        return (q, k, v, qp, kp), dict(causal=causal, scale=0.13)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    return build, _allclose(tol, tol)
+
+
 def _logfmt_encode_case(shape, n_bits):
     def build(rng):
         x = jax.random.normal(rng, shape) * jnp.exp(
@@ -281,6 +319,20 @@ PARITY_CASES = {
         _paged_mla_case((2, 8, 64, 16, 12, 16, 4), "bf16"),
         _paged_mla_case((1, 4, 128, 32, 8, 8, 6), "fp8"),
         _paged_mla_case((3, 16, 32, 8, 24, 4, 8), "fp8"),
+    ],
+    "paged_gqa_decode": [
+        _paged_gqa_case((2, 8, 2, 32, 12, 16, 4), "fp8"),
+        _paged_gqa_case((2, 8, 2, 32, 12, 16, 4), "bf16"),
+        _paged_gqa_case((1, 4, 4, 64, 8, 8, 6), "fp8"),     # G = 1 (MHA)
+        _paged_gqa_case((3, 16, 2, 32, 24, 4, 8), "fp8"),
+    ],
+    "flash_prefill": [
+        _flash_prefill_case((2, 16, 16, 4, 2, 32), jnp.float32, True),
+        _flash_prefill_case((2, 16, 16, 4, 2, 32), jnp.bfloat16, True),
+        _flash_prefill_case((1, 8, 8, 4, 4, 16), jnp.float32, True),
+        _flash_prefill_case((2, 32, 32, 8, 2, 64), jnp.float32, True),
+        _flash_prefill_case((1, 128, 128, 4, 2, 32), jnp.float32, True),
+        _flash_prefill_case((2, 16, 16, 2, 1, 32), jnp.float32, False),
     ],
     "logfmt_encode": [
         _logfmt_encode_case((8, 128), 8),

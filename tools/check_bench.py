@@ -53,6 +53,9 @@ SERVE_KEYS: Dict[str, tuple] = {
     "dense-sharded": SERVE_COMMON[:5] + (
         "tokens_per_s", "slots", "chunk", "max_new", "decode_tokens",
         "mesh_shape", "moe_impl", "wire", "decode_alltoall_bytes",
+        "decode_alltoall_ops_per_scan",
+        "overlap_decode_alltoall_ops_per_scan",
+        "overlap_decode_alltoall_bytes",
         "tokens_equal_single_device"),
     "paged-bf16-shared-prefix": SERVE_COMMON + (
         "workload", "prefill_chunk", "page_size", "pool_pages",
@@ -87,6 +90,8 @@ GATEWAY_KEYS = ("scenario", "arch", "replicas", "slots", "chunk",
 # the paper-grounded gates (see docs/serving.md §4/§7, docs/training.md)
 FP8_MAX_BYTES_RATIO = 0.55     # paged-fp8 cache bytes vs dense bf16
 FP8_MIN_SLOTS_RATIO = 2.0      # paged-fp8 resident slots vs dense budget
+FP8_GQA_MIN_TPS_RATIO = 0.85   # paged-fp8 GQA decode tok/s vs paged-bf16
+                               # (byte-pool storage gate, serving.md §4)
 GATEWAY_SLO_RETENTION = 0.9    # crash-row SLO vs no-fault (serving.md §6)
 PREFIX_MIN_PAGES_SAVED = 2.0   # shared-prefix pool saving (serving.md §7)
 TIER_MIN_RESIDENT_RATIO = 3.0  # kv-tier resident tokens vs device-only
@@ -186,6 +191,15 @@ def validate_serve(doc: dict, *, require_sharded: bool = False) -> List[str]:
                 f"{arch}: paged-fp8 resident-slot ratio "
                 f"{fp8['resident_slots_ratio_vs_dense']:.2f} below "
                 f"{FP8_MIN_SLOTS_RATIO}")
+        if (fp8.get("attention") == "gqa"
+                and fp8.get("tokens_per_s", 0)
+                < FP8_GQA_MIN_TPS_RATIO * bf16.get("tokens_per_s", 0)):
+            errs.append(
+                f"{arch}: paged-fp8 GQA decode {fp8.get('tokens_per_s')} "
+                f"tok/s below {FP8_GQA_MIN_TPS_RATIO}x paged-bf16 "
+                f"({bf16.get('tokens_per_s')}) — fp8 pools must be "
+                "byte-stored (uint8 + LUT decode), not run through "
+                "XLA's per-element f8 emulation in the layer scan")
         if not bf16.get("tokens_equal_dense"):
             errs.append(f"{arch}: paged-bf16 token streams diverge from "
                         "dense (must be bitwise-equal)")
@@ -205,6 +219,22 @@ def validate_serve(doc: dict, *, require_sharded: bool = False) -> List[str]:
             if not r.get("tokens_equal_single_device"):
                 errs.append(f"sharded {impl}: token streams diverge from "
                             "the single-device engine")
+            ops = r.get("decode_alltoall_ops_per_scan", 0)
+            oops = r.get("overlap_decode_alltoall_ops_per_scan", -1)
+            if not (ops > 0 and oops == 2 * ops):
+                errs.append(
+                    f"sharded {impl}: overlap decode must carry BOTH "
+                    f"halves' all-to-alls in one scan body (expected "
+                    f"2x{ops}, got {oops}) — two sequential scans "
+                    "cannot overlap dispatch with compute")
+            ob = r.get("overlap_decode_alltoall_bytes", -1)
+            b = r.get("decode_alltoall_bytes", 0)
+            if not b <= ob <= 2 * b:
+                errs.append(
+                    f"sharded {impl}: overlap decode a2a bytes {ob} "
+                    f"outside [1x, 2x] the single-batch bytes {b} "
+                    "(2x only when both halves pad to the capacity "
+                    "floor)")
         flat = sharded["ep_flat"]["decode_alltoall_bytes"]
         dedup = sharded["ep_dedup"]["decode_alltoall_bytes"]
         if not 0 < dedup < flat:
